@@ -1,0 +1,54 @@
+"""Multi-claim attribution control (paper §7 path C, §8.3): 3/3 repetitions
+must attribute failure/refusal ONLY to the target claim while the non-target
+claim restores successfully."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.core.analyzer import check_multi_claim_attribution, validate_event_sequence
+from repro.core.claims import ClaimMode, ClaimState
+from repro.core.native_descriptor import default_engine_factory
+
+
+def run(out_path: Path = Path("results/vllm-multi-claim-attribution-control.json")):
+    make_engine = default_engine_factory()
+    reps = []
+    for rep in range(3):
+        eng = make_engine()
+        tp, op = tuple(range(100, 116)), tuple(range(200, 216))
+        target = eng.accept_claim(tp, ClaimMode.OFFLOADABLE)
+        other = eng.accept_claim(op, ClaimMode.OFFLOADABLE)
+        for pfx in (tp, op):
+            eng.run(eng.submit(pfx + (5, 6), max_new_tokens=1))
+        eng.offload_claim(target.claim_id)
+        eng.offload_claim(other.claim_id)
+        eng.connector.injection.resident_claim_load_failure = True
+        eng.connector.injection.fail_claim_id = target.claim_id
+        r_other = eng.submit(op + (7, 8), max_new_tokens=1)
+        eng.run(r_other)
+        r_target = eng.submit(tp + (7, 8), max_new_tokens=1)
+        eng.run(r_target)
+        v = check_multi_claim_attribution(eng.events, target.claim_id, other.claim_id)
+        reps.append(
+            {
+                "rep": rep,
+                "target_only_attribution": v.passed,
+                "non_target_restored": other.state == ClaimState.RESTORED,
+                "target_refused": r_target.status == "refused",
+                "sequence_valid": validate_event_sequence(eng.events).passed,
+                "event_bytes": len(eng.events.to_json()),
+            }
+        )
+    summary = {
+        "target_only_attribution": f"{sum(r['target_only_attribution'] for r in reps)}/3",
+        "non_target_restored": f"{sum(r['non_target_restored'] for r in reps)}/3",
+        "non_target_failure_attributions": "0/3",
+    }
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    Path(out_path).write_text(json.dumps({"summary": summary, "repetitions": reps}, indent=1))
+    return summary
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=1))

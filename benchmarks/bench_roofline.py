@@ -1,0 +1,84 @@
+"""Roofline table (deliverable g): per (arch x shape x mesh) three-term
+roofline from the dry-run artifacts in results/dryrun/."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List
+
+
+def build_table(dryrun_dir: Path = Path("results/dryrun"), mesh: str = "single") -> List[Dict]:
+    rows = []
+    for p in sorted((Path(dryrun_dir) / mesh).glob("*.json")):
+        d = json.loads(p.read_text())
+        arch, shape = d["arch"], d["shape"]
+        if d.get("status") == "skipped":
+            rows.append({"arch": arch, "shape": shape, "status": "skipped", "reason": d["reason"]})
+            continue
+        if d.get("status") != "ok":
+            rows.append({"arch": arch, "shape": shape, "status": d.get("status"), "reason": d.get("reason")})
+            continue
+        r = d["roofline"]
+        rows.append(
+            {
+                "arch": arch,
+                "shape": shape,
+                "status": "ok",
+                "compute_s": r["compute_s"],
+                "memory_s": r["memory_s"],
+                "collective_s": r["collective_s"],
+                "dominant": r["dominant"],
+                "model_flops": r["model_flops"],
+                "useful_flops_ratio": r["useful_flops_ratio"],
+                "peak_GB_per_dev": d["memory"]["peak_bytes_per_device"] / 1e9,
+                "fits": d["memory"]["fits_16GiB"],
+                "roofline_fraction": min(
+                    1.0,
+                    max(r["compute_s"], 1e-30)
+                    / max(r["compute_s"], r["memory_s"], r["collective_s"]),
+                ),
+            }
+        )
+    return rows
+
+
+def to_markdown(rows: List[Dict], mesh: str) -> str:
+    lines = [
+        f"# Roofline table ({mesh} pod)",
+        "",
+        "| arch | shape | compute s | memory s | collective s | dominant | useful-FLOPs ratio | peak GB/dev | fits |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | {r['status']}: {r.get('reason','')[:60]} | — | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | {r['memory_s']:.3e} | "
+            f"{r['collective_s']:.3e} | **{r['dominant']}** | {r['useful_flops_ratio']:.2f} | "
+            f"{r['peak_GB_per_dev']:.2f} | {r['fits']} |"
+        )
+    return "\n".join(lines)
+
+
+def run(out_dir: Path = Path("results")) -> Dict[str, str]:
+    out = {}
+    for mesh in ("single", "multi"):
+        rows = build_table(mesh=mesh)
+        if not rows:
+            continue
+        (Path(out_dir) / f"roofline-{mesh}.md").write_text(to_markdown(rows, mesh))
+        (Path(out_dir) / f"roofline-{mesh}.json").write_text(json.dumps(rows, indent=1))
+        ok = [r for r in rows if r.get("status") == "ok"]
+        out[mesh] = (
+            f"{len(ok)} cells; dominant: "
+            + ", ".join(
+                f"{k}={sum(1 for r in ok if r['dominant'] == k)}"
+                for k in ("compute", "memory", "collective")
+            )
+        )
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=1))

@@ -1,0 +1,72 @@
+"""Architecture configs assigned to this paper (public-literature pool).
+
+Every config is selectable via ``--arch <id>`` in the launchers.
+"""
+from __future__ import annotations
+
+from repro.configs.base import (
+    ALL_SHAPES,
+    DECODE_32K,
+    LONG_500K,
+    PREFILL_32K,
+    SHAPES_BY_NAME,
+    TRAIN_4K,
+    ModelConfig,
+    MoEConfig,
+    ShapeSpec,
+    SSMConfig,
+    XLSTMConfig,
+    reduced,
+    shape_applicable,
+)
+from repro.configs.xlstm_350m import CONFIG as XLSTM_350M
+from repro.configs.grok_1_314b import CONFIG as GROK_1_314B
+from repro.configs.arctic_480b import CONFIG as ARCTIC_480B
+from repro.configs.qwen3_1_7b import CONFIG as QWEN3_1_7B
+from repro.configs.h2o_danube_1_8b import CONFIG as H2O_DANUBE_1_8B
+from repro.configs.deepseek_7b import CONFIG as DEEPSEEK_7B
+from repro.configs.stablelm_12b import CONFIG as STABLELM_12B
+from repro.configs.whisper_small import CONFIG as WHISPER_SMALL
+from repro.configs.hymba_1_5b import CONFIG as HYMBA_1_5B
+from repro.configs.phi_3_vision_4_2b import CONFIG as PHI_3_VISION_4_2B
+
+ARCHITECTURES = {
+    c.name: c
+    for c in (
+        XLSTM_350M,
+        GROK_1_314B,
+        ARCTIC_480B,
+        QWEN3_1_7B,
+        H2O_DANUBE_1_8B,
+        DEEPSEEK_7B,
+        STABLELM_12B,
+        WHISPER_SMALL,
+        HYMBA_1_5B,
+        PHI_3_VISION_4_2B,
+    )
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHITECTURES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHITECTURES)}")
+    return ARCHITECTURES[name]
+
+
+__all__ = [
+    "ALL_SHAPES",
+    "ARCHITECTURES",
+    "DECODE_32K",
+    "LONG_500K",
+    "PREFILL_32K",
+    "SHAPES_BY_NAME",
+    "TRAIN_4K",
+    "ModelConfig",
+    "MoEConfig",
+    "ShapeSpec",
+    "SSMConfig",
+    "XLSTMConfig",
+    "get_config",
+    "reduced",
+    "shape_applicable",
+]

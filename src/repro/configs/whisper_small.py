@@ -1,0 +1,28 @@
+"""whisper-small — enc-dec, conv frontend (stub) [arXiv:2212.04356; unverified].
+
+12L d_model=768 12H (GQA kv=12) d_ff=3072 vocab=51865.  The conv audio
+frontend is a STUB per the assignment: ``input_specs()`` provides precomputed
+frame embeddings.  prefill shapes feed seq_len frames through the encoder;
+decode shapes run the decoder with a seq_len self-KV cache plus cross
+attention over ``cross_attend_len`` encoder states.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small",
+    family="audio",
+    num_layers=12,
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=12,
+    d_ff=3072,
+    vocab_size=51865,
+    head_dim=64,
+    encoder_layers=12,
+    is_encoder_decoder=True,
+    cross_attend_len=1500,
+    frontend="audio_frames",
+    frontend_len=1500,
+    norm="layernorm",
+    activation="gelu",
+)

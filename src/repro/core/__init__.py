@@ -1,0 +1,11 @@
+from repro.core.claims import (  # noqa: F401
+    CacheIdentity,
+    ClaimMode,
+    ClaimRegistry,
+    ClaimRejected,
+    ClaimState,
+    InvalidClaimTransition,
+    MaterializationPredicate,
+    ResidentClaim,
+)
+from repro.core.events import E, EventLog  # noqa: F401

@@ -1,0 +1,231 @@
+"""Witness-path analyzer: order, claim identity, outcome attribution.
+
+The analyzer supplies NO runtime behavior (paper §7's trust separation): it
+only checks order, claim match, and controls after the run.  It accepts the
+decisive positive sequences (witness paths A and B, multi-claim path C) and
+rejects the false-positive families the paper enumerates: ordinary offload
+without claim, unclaimed failure, wrong-claim failure, fallback recompute,
+and generic transfer counters.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+from repro.core.events import ALL_EVENT_NAMES, Event, EventLog
+
+
+@dataclass
+class Verdict:
+    passed: bool
+    reasons: List[str] = field(default_factory=list)
+
+    @staticmethod
+    def fail(reason: str) -> "Verdict":
+        return Verdict(False, [reason])
+
+    def __bool__(self) -> bool:  # pragma: no cover - convenience
+        return self.passed
+
+
+def _first(events: Sequence[Event], name: str, after: int = -1, **match) -> Optional[Event]:
+    for e in events:
+        if e.name != name or e.seq <= after:
+            continue
+        if all(
+            (getattr(e, k, None) == v) or (e.payload.get(k) == v) for k, v in match.items()
+        ):
+            return e
+    return None
+
+
+def validate_event_sequence(log: EventLog) -> Verdict:
+    """Every event parseable, names known, total order strictly monotonic."""
+    last = -1
+    for e in log.events:
+        if e.name not in ALL_EVENT_NAMES:
+            return Verdict.fail(f"unknown event {e.name!r}")
+        if e.seq <= last:
+            return Verdict.fail(f"non-monotonic sequence at {e.seq}")
+        last = e.seq
+    return Verdict(True, [f"{len(log)} events, total order valid"])
+
+
+def check_observation_path(log: EventLog, claim_id: str, reuse_request_id: str) -> Verdict:
+    """Witness path A: successful offload/load observation.
+
+    Required order: accept -> materialized -> store(E2, E3, E4 ok) -> E5 ->
+    reuse E0 -> E1 hit -> E6 -> E7 -> E3 -> E4 ok -> E8 -> E9 -> E10.
+    """
+    ev = log.events
+    reasons = []
+
+    acc = _first(ev, "resident_claim_accepted", claim_id=claim_id)
+    if acc is None:
+        return Verdict.fail("claim was never accepted (no responsibility boundary)")
+    mat = _first(ev, "claim_materialized", after=acc.seq, claim_id=claim_id)
+    if mat is None:
+        return Verdict.fail("no claim-scoped materialization event")
+    store = _first(ev, "offload_store_job_created", after=mat.seq, claim_id=claim_id)
+    if store is None:
+        return Verdict.fail("no claim-scoped store job")
+    t_ok = _first(ev, "offload_worker_transfer_finished", after=store.seq, claim_id=claim_id, ok=True)
+    if t_ok is None:
+        return Verdict.fail("no successful claim-scoped store transfer")
+    off = _first(ev, "resident_claim_offloaded", after=t_ok.seq, claim_id=claim_id)
+    if off is None:
+        return Verdict.fail("no resident_claim_offloaded after store success")
+
+    reuse = _first(ev, "request_initialized", after=off.seq, request_id=reuse_request_id)
+    if reuse is None:
+        return Verdict.fail("no reuse request after offload")
+    lookup = _first(ev, "offload_lookup_result", after=reuse.seq, request_id=reuse_request_id)
+    if lookup is None or lookup.payload.get("hit_tokens", 0) <= 0:
+        return Verdict.fail("reuse lookup did not hit the offloaded claim footprint")
+    rr = _first(ev, "resident_claim_restore_required", after=lookup.seq, claim_id=claim_id)
+    if rr is None:
+        return Verdict.fail("restoration was not required before reuse (no E6)")
+    load = _first(ev, "offload_load_job_created", after=rr.seq, claim_id=claim_id)
+    if load is None:
+        return Verdict.fail("no claim-scoped load job")
+    l_ok = _first(
+        ev,
+        "offload_worker_transfer_finished",
+        after=load.seq,
+        claim_id=claim_id,
+        ok=True,
+        direction="host_to_device",
+    )
+    if l_ok is None:
+        return Verdict.fail("no successful host->device transfer for the claim")
+    restored = _first(ev, "resident_claim_restored", after=l_ok.seq, claim_id=claim_id)
+    if restored is None:
+        return Verdict.fail("claim not restored before reuse completion")
+    done = _first(ev, "offload_job_completed", after=restored.seq, claim_id=claim_id)
+    if done is None:
+        return Verdict.fail("load job not completed after restoration")
+    fin = _first(
+        ev, "offload_request_finished_no_pending_jobs", after=done.seq, request_id=reuse_request_id
+    )
+    if fin is None:
+        return Verdict.fail("reuse request did not finish cleanly after restore")
+    reasons.append(
+        "ordered accept->materialize->offload->restore_required->restore->reuse verified"
+    )
+    return Verdict(True, reasons)
+
+
+def check_failure_outcome_path(log: EventLog, claim_id: str, reuse_request_id: str) -> Verdict:
+    """Witness path B: same-claim restoration failure -> fail-closed outcome.
+
+    The decisive sequence (paper §7): accepted claim exists, same claim
+    offloaded, reuse hits and requires restore, matching CPU->GPU load fails,
+    E11, E12 (claim match, FINISHED_ERROR), E13 (blocking_claim_ids=[C]),
+    E14 after E12/E13, all before terminal request handling.
+    """
+    ev = log.events
+    acc = _first(ev, "resident_claim_accepted", claim_id=claim_id)
+    if acc is None:
+        return Verdict.fail("failure without an accepted claim is not a claim outcome")
+    off = _first(ev, "resident_claim_offloaded", after=acc.seq, claim_id=claim_id)
+    if off is None:
+        return Verdict.fail("claim was never offloaded; failure cannot be restoration failure")
+    reuse = _first(ev, "request_initialized", after=off.seq, request_id=reuse_request_id)
+    if reuse is None:
+        return Verdict.fail("no reuse request")
+    lookup = _first(ev, "offload_lookup_result", after=reuse.seq, request_id=reuse_request_id)
+    if lookup is None or lookup.payload.get("hit_tokens", 0) <= 0:
+        return Verdict.fail("reuse lookup did not hit the claim footprint")
+    rr = _first(ev, "resident_claim_restore_required", after=lookup.seq, claim_id=claim_id)
+    if rr is None:
+        return Verdict.fail("no ordered restore-required event")
+    t_fail = _first(
+        ev,
+        "offload_worker_transfer_finished",
+        after=rr.seq,
+        claim_id=claim_id,
+        ok=False,
+        direction="host_to_device",
+    )
+    if t_fail is None:
+        return Verdict.fail("no same-claim host->device transfer failure")
+    e11 = _first(ev, "offload_worker_load_failed", after=t_fail.seq, claim_id=claim_id)
+    if e11 is None:
+        return Verdict.fail("invalid-KV-load path has no affected-block evidence (E11)")
+    e12 = _first(
+        ev,
+        "scheduler_resident_claim_restoration_failed",
+        after=e11.seq,
+        claim_id=claim_id,
+        request_id=reuse_request_id,
+    )
+    if e12 is None:
+        return Verdict.fail("no scheduler-boundary claim-scoped restoration failure (E12)")
+    if e12.payload.get("request_status") != "FINISHED_ERROR":
+        return Verdict.fail("E12 not tied to FINISHED_ERROR status")
+    e13 = _first(ev, "scheduler_active_request_refused", after=e12.seq, request_id=reuse_request_id)
+    if e13 is None:
+        return Verdict.fail("no fail-closed active outcome (E13)")
+    blocking = e13.payload.get("blocking_claim_ids", [])
+    if claim_id not in blocking:
+        return Verdict.fail("refusal not attributed to the blocking claim")
+    e14 = _first(
+        ev, "offload_request_finished_pending_jobs", after=e13.seq, request_id=reuse_request_id
+    )
+    if e14 is None:
+        return Verdict.fail("scheduler outcome not ordered before terminal handling (no E14)")
+    term = _first(ev, "request_finished", after=e14.seq, request_id=reuse_request_id)
+    if term is None or term.payload.get("status") != "FINISHED_ERROR":
+        return Verdict.fail("request did not terminate in FINISHED_ERROR after the outcome")
+    # fallback-recompute rejection: the reuse request must NOT have served
+    # output after the failure (success would mean recompute masked the loss)
+    ok_fin = _first(
+        ev, "offload_request_finished_no_pending_jobs", after=e12.seq, request_id=reuse_request_id
+    )
+    if ok_fin is not None:
+        return Verdict.fail("request served output after claim failure (fallback recompute)")
+    return Verdict(
+        True,
+        ["ordered same-claim failure -> E11 -> E12 -> E13(blocking) -> E14 -> terminal verified"],
+    )
+
+
+def check_multi_claim_attribution(
+    log: EventLog, target_claim: str, other_claim: str
+) -> Verdict:
+    """Witness path C: failure/refusal attribution names ONLY the target."""
+    ev = log.events
+    restored_other = _first(ev, "resident_claim_restored", claim_id=other_claim)
+    if restored_other is None:
+        return Verdict.fail("non-target claim did not restore successfully")
+    for e in ev:
+        if e.name in ("scheduler_resident_claim_restoration_failed",):
+            if e.claim_id != target_claim:
+                return Verdict.fail(f"failure attributed to non-target claim {e.claim_id}")
+        if e.name == "scheduler_active_request_refused":
+            blocking = e.payload.get("blocking_claim_ids", [])
+            if blocking != [target_claim]:
+                return Verdict.fail(f"blocking ids {blocking} != [{target_claim}]")
+    e12 = _first(ev, "scheduler_resident_claim_restoration_failed", claim_id=target_claim)
+    e13 = _first(ev, "scheduler_active_request_refused")
+    if e12 is None or e13 is None:
+        return Verdict.fail("target claim did not receive the scheduler-boundary outcome")
+    return Verdict(True, ["target-only attribution; non-target restored cleanly"])
+
+
+# -- false-positive control checks (the analyzer must REJECT these) -----------
+
+
+def check_no_claim_outcome(log: EventLog) -> Verdict:
+    """Control: a run with no accepted claim must contain zero claim outcomes."""
+    for name in (
+        "scheduler_resident_claim_restoration_failed",
+        "scheduler_active_request_refused",
+        "resident_claim_restoration_failed",
+        "resident_claim_offloaded",
+        "resident_claim_restored",
+        "claim_materialized",
+    ):
+        if log.named(name):
+            return Verdict.fail(f"claim outcome {name} emitted without an accepted claim")
+    return Verdict(True, ["no claim outcomes for unclaimed run"])

@@ -1,0 +1,147 @@
+"""Ordered lifecycle event log — the paper's E0–E14 vocabulary plus the
+native-runtime extensions (acceptance, demotion, expiry, harm, routing).
+
+The paper's exact artifact event names (§7) are preserved so the witness
+tables in EXPERIMENTS.md read one-to-one against the paper:
+
+  E0  request_initialized
+  E1  offload_lookup_result
+  E2  offload_store_job_created
+  E3  offload_worker_transfer_submitted
+  E4  offload_worker_transfer_finished
+  E5  resident_claim_offloaded
+  E6  resident_claim_restore_required
+  E7  offload_load_job_created
+  E8  resident_claim_restored
+  E9  offload_job_completed
+  E10 offload_request_finished_no_pending_jobs
+  E11 offload_worker_load_failed
+  E12 scheduler_resident_claim_restoration_failed
+  E13 scheduler_active_request_refused
+  E14 offload_request_finished_pending_jobs
+
+Ordering is total (a monotonic sequence number assigned at emission); the
+analyzer (core/analyzer.py) consumes the order, never wall-clock time.
+"""
+from __future__ import annotations
+
+import itertools
+import json
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterable, List, Optional
+
+# --- the paper's event aliases ------------------------------------------------
+E = {
+    "E0": "request_initialized",
+    "E1": "offload_lookup_result",
+    "E2": "offload_store_job_created",
+    "E3": "offload_worker_transfer_submitted",
+    "E4": "offload_worker_transfer_finished",
+    "E5": "resident_claim_offloaded",
+    "E6": "resident_claim_restore_required",
+    "E7": "offload_load_job_created",
+    "E8": "resident_claim_restored",
+    "E9": "offload_job_completed",
+    "E10": "offload_request_finished_no_pending_jobs",
+    "E11": "offload_worker_load_failed",
+    "E12": "scheduler_resident_claim_restoration_failed",
+    "E13": "scheduler_active_request_refused",
+    "E14": "offload_request_finished_pending_jobs",
+}
+
+# --- native-runtime extension vocabulary --------------------------------------
+NATIVE_EVENTS = (
+    "resident_claim_accepted",
+    "resident_claim_rejected",
+    "claim_materialized",
+    "resident_claim_demoted",
+    "resident_claim_expired",
+    "resident_claim_harmed",
+    "allocator_victim_excluded",
+    "scheduler_admission_refused",
+    "claim_footprint_accounted",
+    "block_stored",
+    "block_removed",
+    "request_finished",
+    "route_decision",
+    "route_placement",
+    "route_reuse_attributed",
+    "pressure_eviction",
+)
+
+ALL_EVENT_NAMES = frozenset(E.values()) | frozenset(NATIVE_EVENTS)
+
+
+@dataclass(frozen=True)
+class Event:
+    seq: int
+    name: str
+    request_id: Optional[str] = None
+    claim_id: Optional[str] = None
+    payload: Dict[str, Any] = field(default_factory=dict)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "seq": self.seq,
+            "name": self.name,
+            "request_id": self.request_id,
+            "claim_id": self.claim_id,
+            **{k: v for k, v in self.payload.items()},
+        }
+
+
+class EventLog:
+    """Append-only, totally ordered event log (the trace anchor source)."""
+
+    def __init__(self) -> None:
+        self._events: List[Event] = []
+        self._counter = itertools.count()
+        self._lock = threading.Lock()
+
+    def emit(
+        self,
+        name: str,
+        *,
+        request_id: Optional[str] = None,
+        claim_id: Optional[str] = None,
+        **payload: Any,
+    ) -> Event:
+        if name not in ALL_EVENT_NAMES:
+            raise ValueError(f"unknown event name {name!r}")
+        with self._lock:
+            ev = Event(next(self._counter), name, request_id, claim_id, payload)
+            self._events.append(ev)
+        return ev
+
+    @property
+    def events(self) -> List[Event]:
+        return list(self._events)
+
+    def named(self, name: str) -> List[Event]:
+        return [e for e in self._events if e.name == name]
+
+    def for_claim(self, claim_id: str) -> List[Event]:
+        return [e for e in self._events if e.claim_id == claim_id]
+
+    def for_request(self, request_id: str) -> List[Event]:
+        return [e for e in self._events if e.request_id == request_id]
+
+    def to_json(self) -> str:
+        return json.dumps([e.to_dict() for e in self._events], indent=1)
+
+    @staticmethod
+    def from_dicts(rows: Iterable[Dict[str, Any]]) -> "EventLog":
+        log = EventLog()
+        for r in rows:
+            r = dict(r)
+            log.emit(
+                r.pop("name"),
+                request_id=r.pop("request_id", None),
+                claim_id=r.pop("claim_id", None),
+                **{k: v for k, v in r.items() if k != "seq"},
+            )
+        return log
+
+    def __len__(self) -> int:
+        return len(self._events)

@@ -1,0 +1,154 @@
+"""Pallas TPU flash attention (prefill): tiled online softmax.
+
+TPU-native design (DESIGN.md §6): q/k tiles sized in multiples of 128 so the
+QK^T and PV contractions land on the MXU; running max/denominator/accumulator
+live in VMEM scratch across the (sequentially-iterated) kv-block grid axis;
+fp32 accumulation; causal and sliding-window block skipping via ``pl.when``
+so out-of-window tiles are never computed.
+
+Supports GQA (q heads grouped over kv heads via the index map — KV is never
+materialized per-q-head) and grok-style tanh logit soft-capping.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+LANES = 128
+
+
+def _flash_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    acc_ref,
+    m_ref,
+    l_ref,
+    *,
+    sm_scale: float,
+    causal: bool,
+    window: int,
+    softcap: float,
+    block_q: int,
+    block_k: int,
+    kv_len: int,
+    num_k_blocks: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+    relevant = k_start < kv_len  # padded kv blocks contribute nothing
+    if causal:
+        relevant &= k_start <= q_start + block_q - 1
+    if window:
+        relevant &= k_start + block_k > q_start - window + 1
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # [bq, d]
+        k = k_ref[0, 0].astype(jnp.float32)  # [bk, d]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * sm_scale  # [bq, bk]
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = k_pos < kv_len
+        if causal:
+            mask &= q_pos >= k_pos
+        if window:
+            mask &= q_pos - k_pos < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, :1]  # [bq, 1] (scratch is lane-padded to 128)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+
+    @pl.when(ki == num_k_blocks - 1)
+    def _finalize():
+        o_ref[0, 0, ...] = (
+            acc_ref[...] / jnp.maximum(l_ref[:, :1], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+):
+    """q: [B, H, Sq, D]; k, v: [B, KV, Sk, D] -> [B, H, Sq, D]."""
+    B, H, Sq, D = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    G = H // KV
+    sm_scale = 1.0 / math.sqrt(D)
+
+    block_q = min(block_q, max(Sq, 8))
+    block_k = min(block_k, max(Sk, 8))
+    pq, pk = (-Sq) % block_q, (-Sk) % block_k
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    nq, nk = (Sq + pq) // block_q, (Sk + pk) // block_k
+
+    kernel = functools.partial(
+        _flash_kernel,
+        sm_scale=sm_scale,
+        causal=causal,
+        window=window,
+        softcap=softcap,
+        block_q=block_q,
+        block_k=block_k,
+        kv_len=Sk,
+        num_k_blocks=nk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq + pq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),
+            pltpu.VMEM((block_q, LANES), jnp.float32),  # running max (lane-padded)
+            pltpu.VMEM((block_q, LANES), jnp.float32),  # running denominator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :Sq]

@@ -1,0 +1,42 @@
+"""Pallas TPU KV block gather/copy — the claim-restoration hot path.
+
+Restoring an offloaded ResidentClaim re-materializes its KV blocks into the
+device pool: a gather of whole pages by an index table.  On TPU this is a
+pure DMA problem — each grid step copies one page HBM->VMEM->HBM with the
+source page selected by a scalar-prefetched index (Mosaic double-buffers
+consecutive grid steps, so copies overlap).  The same kernel serves pool
+defragmentation/compaction.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _copy_kernel(idx_ref, src_ref, dst_ref):
+    dst_ref[...] = src_ref[...]
+
+
+def kv_block_copy_pallas(src_pages, indices, *, interpret: bool = False):
+    """Gather pages: dst[m] = src[indices[m]].
+
+    src_pages: [N, page_size, KV, D]; indices: [M] int32 -> [M, page, KV, D].
+    """
+    N, page, KV, D = src_pages.shape
+    M = indices.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(M,),
+        in_specs=[
+            pl.BlockSpec((1, page, KV, D), lambda m, idx: (idx[m], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, page, KV, D), lambda m, idx: (m, 0, 0, 0)),
+    )
+    return pl.pallas_call(
+        _copy_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((M, page, KV, D), src_pages.dtype),
+        interpret=interpret,
+    )(indices, src_pages)

@@ -1,0 +1,42 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On TPU the kernels compile natively; elsewhere (this CPU container) they run
+in interpret mode, which executes the kernel body in Python for correctness
+validation against ref.py.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.kv_block_copy import kv_block_copy_pallas
+from repro.kernels.paged_attention import paged_attention_pallas
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "softcap", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0, block_q=128, block_k=128, interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+
+
+@partial(jax.jit, static_argnames=("softcap", "interpret"))
+def paged_attention(q, k_pages, v_pages, block_tables, lengths, *, softcap=0.0, interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return paged_attention_pallas(
+        q, k_pages, v_pages, block_tables, lengths, softcap=softcap, interpret=interpret
+    )
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def kv_block_copy(src_pages, indices, *, interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return kv_block_copy_pallas(src_pages, indices, interpret=interpret)

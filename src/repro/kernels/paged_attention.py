@@ -1,0 +1,137 @@
+"""Pallas TPU paged attention (decode): the serving hot-spot the paper's
+ResidentClaims govern.
+
+One decode step attends a [G, D] query group (GQA q-heads of one kv head)
+over that sequence's KV pages, located through a *block table* — the same
+block table the claim-native engine maintains (serving/kv_cache.py).  Pages
+stream HBM->VMEM via a scalar-prefetched index map (``block_tables`` and
+``lengths`` are prefetch operands, so Mosaic can schedule page DMA ahead of
+compute); online softmax state lives in VMEM scratch across the page grid
+axis; pages past the sequence length are skipped with ``pl.when``.
+
+Memory-bound by design: the roofline term that dominates decode is KV bytes
+per token, which is why restore-before-reuse (claim restoration) is the
+latency-critical path this kernel pairs with (kernels/kv_block_copy.py).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+LANES = 128
+
+
+def _paged_kernel(
+    bt_ref,  # [B, P] scalar prefetch: block tables
+    len_ref,  # [B] scalar prefetch: sequence lengths
+    q_ref,  # [1, 1, G, D]
+    k_ref,  # [1, 1, page, D]
+    v_ref,
+    o_ref,  # [1, 1, G, D]
+    acc_ref,
+    m_ref,
+    l_ref,
+    *,
+    sm_scale: float,
+    page_size: int,
+    num_pages: int,
+    softcap: float,
+):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[b]
+
+    @pl.when(p * page_size < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # [G, D]
+        k = k_ref[0, 0].astype(jnp.float32)  # [page, D]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * sm_scale  # [G, page]
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        k_pos = p * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos < length, s, NEG_INF)
+
+        m_prev = m_ref[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        pexp = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(pexp, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(
+            pexp.astype(v.dtype), v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+
+    @pl.when(p == num_pages - 1)
+    def _finalize():
+        o_ref[0, 0, ...] = (
+            acc_ref[...] / jnp.maximum(l_ref[:, :1], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+def paged_attention_pallas(
+    q,
+    k_pages,
+    v_pages,
+    block_tables,
+    lengths,
+    *,
+    softcap: float = 0.0,
+    interpret: bool = False,
+):
+    """Decode-step attention over paged KV.
+
+    q:            [B, KV, G, D]  (GQA query groups)
+    k/v_pages:    [KV, N_pages, page_size, D]  (the device block pool)
+    block_tables: [B, P] int32  page ids per sequence (padded arbitrarily)
+    lengths:      [B] int32     valid tokens per sequence
+    -> [B, KV, G, D]
+    """
+    B, KV, G, D = q.shape
+    page_size = k_pages.shape[2]
+    P = block_tables.shape[1]
+    sm_scale = 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(
+        _paged_kernel,
+        sm_scale=sm_scale,
+        page_size=page_size,
+        num_pages=P,
+        softcap=softcap,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, P),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, kv, p, bt, ln: (b, kv, 0, 0)),
+            pl.BlockSpec((1, 1, page_size, D), lambda b, kv, p, bt, ln: (kv, bt[b, p], 0, 0)),
+            pl.BlockSpec((1, 1, page_size, D), lambda b, kv, p, bt, ln: (kv, bt[b, p], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, kv, p, bt, ln: (b, kv, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),
+            pltpu.VMEM((G, LANES), jnp.float32),
+            pltpu.VMEM((G, LANES), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
+        interpret=interpret,
+    )(block_tables, lengths, q, k_pages, v_pages)

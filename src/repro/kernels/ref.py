@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel (naive, trusted formulations)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0):
+    """Naive quadratic attention.  q: [B, H, Sq, D]; k, v: [B, KV, Sk, D]."""
+    B, H, Sq, D = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    G = H // KV
+    qf = q.astype(jnp.float32).reshape(B, KV, G, Sq, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qf, kf) / math.sqrt(D)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window:
+        mask &= q_pos - k_pos < window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", p, vf)
+    return out.reshape(B, H, Sq, D).astype(q.dtype)
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths, *, softcap=0.0):
+    """Gather pages densely, then masked softmax attention.
+
+    q: [B, KV, G, D]; k/v_pages: [KV, N, page, D]; block_tables: [B, P];
+    lengths: [B] -> [B, KV, G, D].
+    """
+    B, KV, G, D = q.shape
+    page = k_pages.shape[2]
+    P = block_tables.shape[1]
+    # dense per-sequence KV: [B, KV, P*page, D]
+    kd = k_pages[:, block_tables]  # [KV, B, P, page, D]
+    vd = v_pages[:, block_tables]
+    kd = kd.transpose(1, 0, 2, 3, 4).reshape(B, KV, P * page, D).astype(jnp.float32)
+    vd = vd.transpose(1, 0, 2, 3, 4).reshape(B, KV, P * page, D).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bksd->bkgs", q.astype(jnp.float32), kd) / math.sqrt(D)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    pos = jnp.arange(P * page)[None, :]
+    s = jnp.where((pos < lengths[:, None])[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgs,bksd->bkgd", p, vd).astype(q.dtype)
+
+
+def kv_block_copy_ref(src_pages, indices):
+    return src_pages[indices]

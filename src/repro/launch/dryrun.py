@@ -1,0 +1,223 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    # Host-compile workaround: the CPU backend legalizes bf16 dots via f32
+    # operand converts, and while-loop LICM then hoists those converts out of
+    # the layer scan as full f32 KV-cache replicas (+16 GB/dev phantom temp
+    # on grok decode).  The TPU target needs no legalization, so these passes
+    # stay enabled there.  See EXPERIMENTS.md §Dry-run.
+    "--xla_disable_hlo_passes=while-loop-invariant-code-motion,"
+    "while-loop-expensive-invariant-code-motion " + os.environ.get("XLA_FLAGS", "")
+)
+# The lines above MUST precede any other import (jax locks the device
+# count on first backend init).  Everything below is ordinary code.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+against the production meshes, prove memory fits, and extract the roofline
+inputs (deliverables e and g).
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b --shape decode_32k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Each cell writes results/dryrun/<mesh>/<arch>__<shape>.json with
+memory_analysis, cost_analysis, per-kind collective bytes, and the three
+roofline terms.  Already-computed cells are skipped unless --force.
+--subprocess runs each cell in a fresh interpreter (crash isolation for the
+--all sweep).
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+from pathlib import Path
+
+HBM_PER_CHIP = 16 * 1024**3  # v5e-class: 16 GiB
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_path: Path, moe_strategy: str = "auto", attn_sharding: str = "gather_kv", kv_dtype: str = "bf16") -> dict:
+    import jax
+
+    from repro.configs import SHAPES_BY_NAME, get_config
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import CellSkipped, build_cell, lower_cell
+    from repro.roofline.analysis import (
+        collective_bytes_from_hlo,
+        collective_bytes_with_trip_counts,
+        model_flops_for,
+        roofline_report,
+    )
+    from repro.roofline.analytic import cell_flops, cell_hbm_bytes
+
+    from repro.models.layers import set_attn_sharding
+
+    set_attn_sharding(attn_sharding)
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = mesh.devices.size
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "chips": chips,
+        "status": "ok",
+    }
+    try:
+        cell = build_cell(arch, shape_name, mesh, moe_strategy=moe_strategy,
+                          kv_cache_dtype=kv_dtype)
+    except CellSkipped as e:
+        record.update(status="skipped", reason=str(e))
+        out_path.write_text(json.dumps(record, indent=1))
+        print(f"[dryrun] SKIP {arch} x {shape_name} x {mesh_kind}: {e}")
+        return record
+
+    lowered = lower_cell(cell)
+    t_lower = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    coll_flat = collective_bytes_from_hlo(hlo)
+    coll = collective_bytes_with_trip_counts(hlo)
+
+    mem_rec = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+        "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+        "code_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
+        "alias_bytes": getattr(mem, "alias_size_in_bytes", 0),
+    }
+    # peak per-device demand: arguments + outputs + temps (aliased/donated
+    # buffers counted once via alias_bytes subtraction)
+    peak = (
+        mem_rec["argument_bytes"]
+        + mem_rec["output_bytes"]
+        + mem_rec["temp_bytes"]
+        - mem_rec["alias_bytes"]
+    )
+    mem_rec["peak_bytes_per_device"] = int(peak)
+    mem_rec["fits_16GiB"] = bool(peak <= HBM_PER_CHIP)
+
+    flops_raw = float(cost.get("flops", 0.0))
+    bytes_raw = float(cost.get("bytes accessed", cost.get("bytes_accessed", 0.0)))
+
+    cfg = get_config(arch)
+    if kv_dtype != "bf16":
+        cfg = cfg.replace(kv_cache_dtype=kv_dtype)
+    shape = SHAPES_BY_NAME[shape_name]
+    aflops = cell_flops(cfg, shape)
+    abytes = cell_hbm_bytes(cfg, shape, chips)
+    terms = roofline_report(
+        flops_per_device=aflops["total"] / chips,
+        bytes_per_device=abytes["per_device"],
+        collective_bytes_per_device=float(coll["total"]),
+        chips=chips,
+        model_flops=model_flops_for(cfg, shape),
+    )
+
+    record.update(
+        timing={"lower_s": t_lower - t0, "compile_s": t_compile - t_lower},
+        memory=mem_rec,
+        cost_analysis_raw={
+            "flops_per_device": flops_raw,
+            "bytes_per_device": bytes_raw,
+            "note": "scan bodies counted once by XLA cost analysis; see analytic",
+        },
+        analytic={"flops": aflops, "hbm_bytes": abytes},
+        collectives=coll,
+        collectives_flat=coll_flat,
+        roofline=terms.to_dict(),
+        moe_strategy=moe_strategy,
+        attn_sharding=attn_sharding,
+    )
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(record, indent=1))
+    print(
+        f"[dryrun] OK {arch} x {shape_name} x {mesh_kind}: "
+        f"compile {t_compile - t_lower:.1f}s, peak {peak / 1e9:.2f} GB/dev "
+        f"(fits={mem_rec['fits_16GiB']}), dominant={terms.dominant}"
+    )
+    return record
+
+
+def cell_list():
+    from repro.configs import ALL_SHAPES, ARCHITECTURES
+
+    return [(a, s.name) for a in sorted(ARCHITECTURES) for s in ALL_SHAPES]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--moe-strategy", default="auto")
+    ap.add_argument("--attn-sharding", default="gather_kv",
+                    choices=["chunked_seq", "gather_kv", "heads"])
+    ap.add_argument("--kv-dtype", default="bf16", choices=["bf16", "int8"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument(
+        "--subprocess", action="store_true",
+        help="run each cell in a fresh interpreter (crash isolation)",
+    )
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = cell_list()
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    failures = 0
+    for mesh_kind in meshes:
+        for arch, shape_name in cells:
+            out_path = Path(args.out) / mesh_kind / f"{arch}__{shape_name}.json"
+            if out_path.exists() and not args.force:
+                rec = json.loads(out_path.read_text())
+                if rec.get("status") in ("ok", "skipped"):
+                    print(f"[dryrun] cached {arch} x {shape_name} x {mesh_kind}")
+                    continue
+            out_path.parent.mkdir(parents=True, exist_ok=True)
+            if args.subprocess:
+                cmd = [
+                    sys.executable, "-m", "repro.launch.dryrun",
+                    "--arch", arch, "--shape", shape_name, "--mesh", mesh_kind,
+                    "--out", args.out, "--moe-strategy", args.moe_strategy,
+                    "--attn-sharding", args.attn_sharding,
+                    "--kv-dtype", args.kv_dtype,
+                ]
+                if args.force:
+                    cmd.append("--force")
+                r = subprocess.run(cmd, timeout=3600)
+                if r.returncode != 0:
+                    failures += 1
+                    out_path.write_text(json.dumps({
+                        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                        "status": "error", "reason": f"subprocess rc={r.returncode}",
+                    }, indent=1))
+                continue
+            try:
+                run_cell(arch, shape_name, mesh_kind, out_path, args.moe_strategy,
+                         args.attn_sharding, args.kv_dtype)
+            except Exception as e:  # record the failure; it is a bug to fix
+                failures += 1
+                out_path.write_text(json.dumps({
+                    "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                    "status": "error", "reason": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc(),
+                }, indent=1))
+                print(f"[dryrun] FAIL {arch} x {shape_name} x {mesh_kind}: {e}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,225 @@
+"""Jitted, sharded train/serve steps for every (arch x shape x mesh) cell.
+
+``build_cell`` returns the jittable step function plus ShapeDtypeStruct
+argument specs and NamedShardings — everything the multi-pod dry-run needs
+to ``.lower().compile()`` without allocating a single parameter.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES_BY_NAME, get_config, shape_applicable
+from repro.models.registry import build_model
+from repro.sharding.rules import (
+    ShardingRules,
+    batch_pspecs,
+    cache_pspecs,
+    param_pspecs,
+)
+from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state, opt_state_pspecs
+
+
+class CellSkipped(Exception):
+    pass
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape_name: str
+    kind: str  # train | prefill | decode
+    step_fn: Callable
+    arg_specs: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    mesh: Mesh
+    cfg: Any
+
+
+def _named(mesh, tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _f32_params(shapes):
+    """Master params are fp32 (the single stored copy)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+        if jnp.issubdtype(s.dtype, jnp.floating)
+        else s,
+        shapes,
+    )
+
+
+def _cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree
+    )
+
+
+def optimizer_for(cfg) -> AdamWConfig:
+    # int8 moments for the >100B MoE archs (memory budget: DESIGN.md §5)
+    if cfg.moe.num_experts and cfg.param_count() > 50e9:
+        return AdamWConfig(state_dtype="int8")
+    return AdamWConfig(state_dtype="fp32")
+
+
+def microbatches_for(cfg) -> int:
+    """Gradient-accumulation factor (divides the remat stash + transients).
+
+    The >100B MoE archs and the recurrent stacks (whose chunked scans carry
+    f32 gate tensors) are the cells whose raw host-compile peak exceeded
+    16 GiB/dev; 8-way/4-way accumulation brings the per-microbatch
+    activation footprint inside budget (EXPERIMENTS.md §Dry-run).
+    """
+    if cfg.param_count() > 50e9:
+        return 8
+    if cfg.family in ("ssm", "hybrid"):
+        return 4
+    if cfg.param_count() > 3e9:
+        return 2  # the per-layer gathered-KV transients scale with B_micro
+    return 1
+
+
+def build_cell(
+    arch: str,
+    shape_name: str,
+    mesh: Mesh,
+    *,
+    moe_strategy: str = "auto",
+    seq_shard_activations: bool = True,
+    kv_cache_dtype: str = "bf16",
+) -> Cell:
+    cfg = get_config(arch)
+    if kv_cache_dtype != "bf16":
+        cfg = cfg.replace(kv_cache_dtype=kv_cache_dtype)
+    shape = SHAPES_BY_NAME[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        raise CellSkipped(why)
+
+    rules = ShardingRules.for_mesh(
+        mesh,
+        serving=shape.kind != "train",
+        param_bytes=cfg.param_count() * 2.0,  # bf16 serving weights
+    )
+    bundle = build_model(cfg, mesh=mesh, moe_strategy=moe_strategy)
+    param_shapes = jax.eval_shape(bundle.init_params, jax.random.PRNGKey(0))
+    p_specs = param_pspecs(cfg, param_shapes, mesh, rules)
+
+    batch_specs_sd = bundle.batch_spec(shape)
+    b_specs = batch_pspecs(cfg, batch_specs_sd, mesh, rules)
+    dp = rules.dp_axes
+
+    if shape.kind == "train":
+        master_shapes = _f32_params(param_shapes)
+        opt_cfg = optimizer_for(cfg)
+        opt_shapes = jax.eval_shape(lambda: init_opt_state(master_shapes, opt_cfg))
+        o_specs = opt_state_pspecs(p_specs, master_shapes, opt_cfg, mesh)
+
+        n_micro = microbatches_for(cfg)
+
+        def train_step(params, opt_state, batch):
+            compute = _cast_tree(params, jnp.bfloat16)
+            grad_fn = jax.value_and_grad(lambda cp, b: bundle.loss_fn(cp, b))
+            if n_micro > 1:
+                mb = jax.tree.map(
+                    lambda x: x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:]),
+                    batch,
+                )
+
+                def acc(carry, micro):
+                    loss_sum, g_acc = carry
+                    l, g = grad_fn(compute, micro)
+                    g_acc = jax.tree.map(
+                        lambda a, b: a + b.astype(jnp.float32), g_acc, g
+                    )
+                    return (loss_sum + l, g_acc), None
+
+                init = (
+                    jnp.float32(0.0),
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), compute),
+                )
+                (loss_sum, grads), _ = jax.lax.scan(acc, init, mb)
+                loss = loss_sum / n_micro
+                grads = jax.tree.map(lambda g: g / n_micro, grads)
+            else:
+                loss, grads = grad_fn(compute, batch)
+                grads = _cast_tree(grads, jnp.float32)
+            params, opt_state, metrics = adamw_update(grads, opt_state, params, opt_cfg)
+            return params, opt_state, {"loss": loss, **metrics}
+
+        arg_specs = (master_shapes, opt_shapes, batch_specs_sd)
+        in_sh = (_named(mesh, p_specs), _named(mesh, o_specs), _named(mesh, b_specs))
+        out_sh = (
+            _named(mesh, p_specs),
+            _named(mesh, o_specs),
+            {"loss": NamedSharding(mesh, P()), "grad_norm": NamedSharding(mesh, P()),
+             "lr": NamedSharding(mesh, P())},
+        )
+        return Cell(arch, shape_name, "train", train_step, arg_specs, in_sh, out_sh,
+                    (0, 1), mesh, cfg)
+
+    if shape.kind == "prefill":
+        cache_shapes = bundle.cache_spec(shape)
+        c_specs = cache_pspecs(cfg, cache_shapes, mesh, rules)
+        V = cfg.vocab_size
+        logits_spec = P(dp, rules.tp_axis if V % mesh.shape[rules.tp_axis] == 0 else None)
+
+        def prefill_step(params, batch):
+            return bundle.prefill_fn(params, batch, shape.seq_len)
+
+        arg_specs = (param_shapes, batch_specs_sd)
+        in_sh = (_named(mesh, p_specs), _named(mesh, b_specs))
+        out_sh = (NamedSharding(mesh, logits_spec), _named(mesh, c_specs))
+        return Cell(arch, shape_name, "prefill", prefill_step, arg_specs, in_sh, out_sh,
+                    (), mesh, cfg)
+
+    # decode: serve_step = one new token against a seq_len cache
+    cache_shapes = bundle.cache_spec(shape)
+    c_specs = cache_pspecs(cfg, cache_shapes, mesh, rules)
+    B = shape.global_batch
+    dp_ok = B % jax.tree.reduce(lambda a, b: a * b, [mesh.shape[a] for a in dp], 1) == 0
+    vec_spec = P(dp) if dp_ok else P()
+    V = cfg.vocab_size
+    logits_spec = P(
+        dp if dp_ok else None, rules.tp_axis if V % mesh.shape[rules.tp_axis] == 0 else None
+    )
+
+    def serve_step(params, cache, tokens, cur_pos):
+        return bundle.decode_fn(params, cache, tokens, cur_pos)
+
+    tok_spec = jax.ShapeDtypeStruct((B,), jnp.int32)
+    pos_spec = jax.ShapeDtypeStruct((B,), jnp.int32)
+    arg_specs = (param_shapes, cache_shapes, tok_spec, pos_spec)
+    in_sh = (
+        _named(mesh, p_specs),
+        _named(mesh, c_specs),
+        NamedSharding(mesh, vec_spec),
+        NamedSharding(mesh, vec_spec),
+    )
+    out_sh = (NamedSharding(mesh, logits_spec), _named(mesh, c_specs))
+    return Cell(arch, shape_name, "decode", serve_step, arg_specs, in_sh, out_sh,
+                (1,), mesh, cfg)
+
+
+def lower_cell(cell: Cell):
+    jitted = jax.jit(
+        cell.step_fn,
+        in_shardings=cell.in_shardings,
+        out_shardings=cell.out_shardings,
+        donate_argnums=cell.donate_argnums,
+    )
+    with cell.mesh:
+        return jitted.lower(*cell.arg_specs)

@@ -1,0 +1,73 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --reduced \
+      --steps 200 --batch 8 --seq 64 --ckpt-dir /tmp/ckpt
+
+Full-config multi-pod launches use the same entry point with --mesh
+production (on real hardware; this container runs reduced configs on the
+host device).  Resume is automatic when --ckpt-dir holds a checkpoint.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import jax
+
+from repro.configs import get_config, reduced as reduce_cfg
+from repro.models.registry import build_model
+from repro.training.data import DataConfig
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_loop import Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--reduced", action="store_true", help="CPU-sized config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--state-dtype", default="fp32", choices=["fp32", "bf16", "int8"])
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--mesh", default="debug", choices=["debug", "production"])
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_cfg(cfg)
+    if args.mesh == "production":
+        from repro.launch.mesh import make_production_mesh
+
+        mesh = make_production_mesh()
+    else:
+        from repro.launch.mesh import make_debug_mesh
+
+        mesh = make_debug_mesh(1, 1)
+
+    bundle = build_model(cfg, mesh=None if args.mesh == "debug" else mesh)
+    trainer = Trainer(
+        bundle,
+        mesh,
+        data_cfg=DataConfig(cfg.vocab_size, args.seq, args.batch),
+        opt_cfg=AdamWConfig(lr=args.lr, state_dtype=args.state_dtype, warmup_steps=20),
+        ckpt_dir=Path(args.ckpt_dir) if args.ckpt_dir else None,
+        ckpt_every=args.ckpt_every,
+    )
+    if args.ckpt_dir:
+        resumed = trainer.resume()
+        if resumed:
+            print(f"[train] resumed from step {trainer.step}")
+    metrics = trainer.run(args.steps)
+    first, last = metrics[0]["loss"], metrics[-1]["loss"]
+    print(f"[train] loss {first:.4f} -> {last:.4f} over {len(metrics)} steps")
+    if args.out:
+        Path(args.out).write_text(json.dumps(metrics, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.models.registry import build_model, analytic_param_count  # noqa: F401

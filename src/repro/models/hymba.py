@@ -1,0 +1,146 @@
+"""Hymba — parallel attention + mamba heads per layer (arXiv:2411.13676).
+
+Each layer: pre-norm -> [sliding-window attention || selective SSM] fused by
+averaging the two per-path outputs -> residual; then pre-norm -> MLP ->
+residual.  The hybrid cache is the *pair* (attention ring KV, SSM state):
+a ResidentClaim over a Hymba context must restore both halves or fail closed
+(DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (
+    apply_norm,
+    attn_decode_layer,
+    attn_init,
+    attn_prefill_layer,
+    chunked_cross_entropy,
+    constrain_activations,
+    decode_slot,
+    slot_update,
+    embed_init,
+    make_norm,
+    mlp_apply,
+    mlp_init,
+)
+from repro.models.transformer import unembed
+
+
+def init_params(cfg, rng):
+    k_embed, k_layers, k_head = jax.random.split(rng, 3)
+
+    def layer_init(k):
+        ks = jax.random.split(k, 5)
+        return {
+            "ln1": make_norm(cfg.norm, ks[0], cfg.d_model),
+            "attn": attn_init(ks[1], cfg),
+            "ssm": ssm_lib.ssm_init(ks[2], cfg),
+            "ln2": make_norm(cfg.norm, ks[3], cfg.d_model),
+            "mlp": mlp_init(ks[4], cfg.d_model, cfg.d_ff, cfg.activation),
+        }
+
+    params = {
+        "embed": embed_init(k_embed, cfg.vocab_size, cfg.d_model),
+        "layers": jax.vmap(layer_init)(jax.random.split(k_layers, cfg.num_layers)),
+        "final_norm": make_norm(cfg.norm, k_head, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(k_head, (cfg.d_model, cfg.vocab_size), jnp.float32) * 0.02
+        ).astype(params["embed"].dtype)
+    return params
+
+
+def make_cache(cfg, batch: int, cache_len: int):
+    L, KV, Dh = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+    Sc = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+    stack = lambda tree: jax.tree.map(lambda a: jnp.broadcast_to(a, (L,) + a.shape).copy(), tree)
+    return {
+        "k": jnp.zeros((L, batch, Sc, KV, Dh), jnp.bfloat16),
+        "v": jnp.zeros((L, batch, Sc, KV, Dh), jnp.bfloat16),
+        "pos": jnp.full((batch, Sc), -1, jnp.int32),
+        "ssm": stack(ssm_lib.ssm_state_init(cfg, batch)),  # [L, ...]
+    }
+
+
+def forward_hidden(params, cfg, x, positions, ssm_states, *, collect_cache=False, remat=False, mesh=None):
+    def body(carry, xs):
+        x, = carry
+        x = constrain_activations(x, mesh)
+        lp, st = xs
+        h = apply_norm(cfg.norm, lp["ln1"], x)
+        a, (k_, v_) = attn_prefill_layer(lp["attn"], cfg, h, positions, mesh=mesh)
+        s, nst = ssm_lib.ssm_forward(lp["ssm"], cfg, h, st, mesh=mesh)
+        x = x + 0.5 * (a + s)
+        h = apply_norm(cfg.norm, lp["ln2"], x)
+        x = x + mlp_apply(lp["mlp"], h, cfg.activation)
+        x = constrain_activations(x, mesh)
+        ys = (k_, v_, nst) if collect_cache else (nst,)
+        return (x,), ys
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x,), ys = jax.lax.scan(body, (x,), (params["layers"], ssm_states))
+    return x, ys
+
+
+def loss_fn(params, cfg, batch, mesh=None, **_):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    states = make_cache(cfg, B, 1)["ssm"]
+    x, _ = forward_hidden(params, cfg, x, positions, states, remat=True, mesh=mesh)
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    labels = jnp.concatenate([tokens[:, 1:], jnp.full((B, 1), -1, tokens.dtype)], axis=1)
+    return chunked_cross_entropy(x, unembed(cfg, params), labels)
+
+
+def prefill(params, cfg, batch, cache_len: int, mesh=None, **_):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    cache = make_cache(cfg, B, cache_len)
+    x, (ck, cv, nst) = forward_hidden(params, cfg, x, positions, cache["ssm"], collect_cache=True, mesh=mesh)
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    logits = (x[:, -1] @ unembed(cfg, params)).astype(jnp.float32)
+    Sc = cache["k"].shape[2]
+    keep = min(Sc, S)
+    cache["k"] = cache["k"].at[:, :, :keep].set(ck[:, :, S - keep :])
+    cache["v"] = cache["v"].at[:, :, :keep].set(cv[:, :, S - keep :])
+    cache["pos"] = cache["pos"].at[:, :keep].set(positions[:, S - keep :])
+    cache["ssm"] = nst
+    return logits, cache
+
+
+def decode_step(params, cfg, cache, tokens, cur_pos, mesh=None, **_):
+    B = tokens.shape[0]
+    x = params["embed"][tokens][:, None, :]
+    Sc = cache["k"].shape[2]
+    slot = decode_slot(cfg, Sc, cur_pos)
+    new_pos = slot_update(cache["pos"][..., None], cur_pos[:, None, None], slot)[..., 0]
+
+    def body(carry, xs):
+        x, = carry
+        x = constrain_activations(x, mesh, seq_dim=None)
+        lp, ck, cv, st = xs
+        h = apply_norm(cfg.norm, lp["ln1"], x)
+        a, nk, nv = attn_decode_layer(lp["attn"], cfg, h, ck, cv, new_pos, cur_pos, slot)
+        s, nst = ssm_lib.ssm_decode(lp["ssm"], cfg, h, st, mesh=mesh)
+        x = x + 0.5 * (a + s)
+        h = apply_norm(cfg.norm, lp["ln2"], x)
+        x = x + mlp_apply(lp["mlp"], h, cfg.activation)
+        return (x,), (constrain_activations(nk, mesh), constrain_activations(nv, mesh), nst)
+
+    (x,), (nk, nv, nst) = jax.lax.scan(
+        body, (x,), (params["layers"], cache["k"], cache["v"], cache["ssm"])
+    )
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    logits = (x[:, 0] @ unembed(cfg, params)).astype(jnp.float32)
+    return logits, {"k": nk, "v": nv, "pos": new_pos, "ssm": nst}

@@ -1,0 +1,256 @@
+"""Mixture-of-Experts MLP with honest-FLOPs sort-free capacity dispatch.
+
+Dispatch strategy (production pattern, not the one-hot-einsum toy):
+  1. top-k gating over E experts;
+  2. position-within-expert via a cumulative one-hot count;
+  3. capacity-bounded scatter of token indices into an [E, C] slot table
+     (overflow tokens drop, standard GShard semantics);
+  4. gather -> grouped einsum over experts -> weighted scatter-add back.
+The expert einsum FLOPs are exactly E*C*d*ff — no dispatch-einsum inflation —
+so the roofline compute term reflects real expert work.
+
+Distribution (inside ``shard_map``):
+  - **EP** (E divisible by the model-axis size): experts are sharded over
+    'model'; activations are replicated over 'model' (they are data-sharded),
+    each model rank dispatches only to its local experts and the partial
+    outputs are ``psum``-ed over 'model'.  Communication = one all-reduce of
+    [T_local, d] per MoE layer — identical shape to a dense TP MLP.
+  - **TP-MoE** (E < model size, e.g. grok-1's 8 experts on a 16-wide model
+    axis): every rank computes all experts on a 1/model slice of d_ff and
+    ``psum``s the down-projection partials.
+An all-to-all dispatch variant is provided for the perf hillclimb
+(`EXPERIMENTS.md` §Perf) — see ``moe_apply_sharded(..., strategy="a2a")``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import DEFAULT_DTYPE, dense_init
+
+
+def moe_init(rng, cfg):
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.moe.num_experts
+    ks = jax.random.split(rng, 4)
+
+    def expert_stack(k, din, dout):
+        return jax.vmap(lambda kk: dense_init(kk, din, dout))(jax.random.split(k, E))
+
+    return {
+        "router": dense_init(ks[0], d, E, dtype=jnp.float32),
+        "w_gate": expert_stack(ks[1], d, ff),
+        "w_up": expert_stack(ks[2], d, ff),
+        "w_down": expert_stack(ks[3], ff, d),
+    }
+
+
+# ---------------------------------------------------------------------------
+# dispatch core (local math; used verbatim inside shard_map bodies)
+# ---------------------------------------------------------------------------
+
+
+def _dispatch(x, router, k: int, capacity: int):
+    """Compute slot tables for capacity-bounded top-k dispatch.
+
+    x: [T, d] -> (slot_tokens [E, C] in [0, T] (T = dropped sentinel),
+                  slot_gates [E, C], aux_loss scalar)
+    """
+    T = x.shape[0]
+    E = router.shape[-1]
+    # dot in the activation dtype (casting x to f32 materializes a full f32
+    # activation copy); the small [T, E] logits are upcast for gating math
+    logits = (x @ router.astype(x.dtype)).astype(jnp.float32)  # [T, E]
+    gates_full = jax.nn.softmax(logits, axis=-1)
+    top_logits, top_e = jax.lax.top_k(logits, k)  # [T, k]
+    top_w = jax.nn.softmax(top_logits, axis=-1)  # renormalized over selected
+
+    flat_e = top_e.reshape(-1)  # [T*k], token-major
+    flat_w = top_w.reshape(-1)
+    onehot = (flat_e[:, None] == jnp.arange(E)[None, :]).astype(jnp.int32)
+    pos = jnp.take_along_axis(jnp.cumsum(onehot, axis=0) - 1, flat_e[:, None], axis=1)[:, 0]
+    token_idx = jnp.repeat(jnp.arange(T), k)
+
+    slot_tokens = jnp.full((E, capacity), T, jnp.int32)
+    slot_gates = jnp.zeros((E, capacity), jnp.float32)
+    slot_tokens = slot_tokens.at[flat_e, pos].set(token_idx, mode="drop")
+    slot_gates = slot_gates.at[flat_e, pos].set(flat_w, mode="drop")
+
+    # GShard aux loss: E * mean_e(frac_tokens_e * mean_gate_e)
+    frac = jnp.mean(onehot.astype(jnp.float32).reshape(T, k, E).sum(1), axis=0)
+    mean_gate = jnp.mean(gates_full, axis=0)
+    aux = E * jnp.sum(frac * mean_gate)
+    return slot_tokens, slot_gates, aux
+
+
+def _expert_ffn(xg, wg, wu, wd):
+    """xg: [E', C, d]; w*: [E', d, ff] / [E', ff, d] -> [E', C, d]."""
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xg, wg)) * jnp.einsum("ecd,edf->ecf", xg, wu)
+    return jnp.einsum("ecf,efd->ecd", h, wd)
+
+
+def _combine(slot_tokens, slot_gates, y, T, d, dtype):
+    """Weighted scatter-add of expert outputs back to token order."""
+    out = jnp.zeros((T + 1, d), jnp.float32)
+    w = (y.astype(jnp.float32) * slot_gates[..., None]).reshape(-1, d)
+    out = out.at[slot_tokens.reshape(-1)].add(w, mode="drop")
+    return out[:T].astype(dtype)
+
+
+def capacity_for(cfg, T: int) -> int:
+    k, E, cf = cfg.moe.experts_per_token, cfg.moe.num_experts, cfg.moe.capacity_factor
+    return max(1, int(T * k * cf / E))
+
+
+def moe_apply_local(p, x, cfg) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-device MoE (smoke tests, tiny serving engine). x: [T, d]."""
+    T, d = x.shape
+    C = capacity_for(cfg, T)
+    slot_tokens, slot_gates, aux = _dispatch(x, p["router"], cfg.moe.experts_per_token, C)
+    x_pad = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)], axis=0)
+    xg = x_pad[slot_tokens]  # [E, C, d]
+    y = _expert_ffn(xg, p["w_gate"], p["w_up"], p["w_down"])
+    return _combine(slot_tokens, slot_gates, y, T, d, x.dtype), aux
+
+
+# ---------------------------------------------------------------------------
+# sharded variants
+# ---------------------------------------------------------------------------
+
+
+def moe_apply_sharded(
+    p,
+    x,
+    cfg,
+    mesh,
+    *,
+    dp_axes: Tuple[str, ...] = ("data",),
+    tp_axis: str = "model",
+    fsdp_axis: str = "data",
+    strategy: str = "auto",
+):
+    """Distributed MoE. x: [T_global, d] sharded over dp_axes.
+
+    strategy: "auto" -> EP when E % model == 0 else TP-MoE; "a2a" -> EP with
+    explicit all-to-all dispatch (hillclimb variant, E % model == 0 only).
+
+    Expert weights enter the shard_map STILL FSDP-sharded over ``fsdp_axis``
+    and are all-gathered explicitly inside the body: letting GSPMD insert the
+    gather at the (loop-invariant) scan operand hoists it out of the layer
+    scan and materializes every layer's experts at once (+58 GB/dev measured
+    on arctic train).  The in-body gather is per-layer by construction.
+    """
+    M = mesh.shape[tp_axis]
+    E = cfg.moe.num_experts
+    k = cfg.moe.experts_per_token
+    if strategy == "auto":
+        strategy = "ep" if E % M == 0 else "tp"
+    if strategy in ("ep", "a2a") and E % M != 0:
+        raise ValueError(f"EP requires E % model == 0 (E={E}, model={M})")
+
+    d = x.shape[-1]
+    dp_spec = P(dp_axes, None)
+    fs = fsdp_axis if mesh.shape[fsdp_axis] > 1 else None
+
+    def gather(w, axis):
+        if fs is None:
+            return w
+        return jax.lax.all_gather(w, fs, axis=axis, tiled=True)
+
+    if strategy == "ep":
+        in_specs = (
+            dp_spec,
+            P(),
+            P(tp_axis, fs, None),
+            P(tp_axis, fs, None),
+            P(tp_axis, None, fs),
+        )
+
+        def body(x_loc, router, wg, wu, wd):
+            wg, wu, wd = gather(wg, 1), gather(wu, 1), gather(wd, 2)
+            T = x_loc.shape[0]
+            C = capacity_for(cfg, T)
+            slot_tokens, slot_gates, aux = _dispatch(x_loc, router, k, C)
+            e0 = jax.lax.axis_index(tp_axis) * (E // M)
+            st = jax.lax.dynamic_slice_in_dim(slot_tokens, e0, E // M, 0)
+            sg = jax.lax.dynamic_slice_in_dim(slot_gates, e0, E // M, 0)
+            x_pad = jnp.concatenate([x_loc, jnp.zeros((1, d), x_loc.dtype)], axis=0)
+            y = _expert_ffn(x_pad[st], wg, wu, wd)
+            out = _combine(st, sg, y, T, d, x_loc.dtype)
+            out = jax.lax.psum(out, tp_axis)
+            return out, jax.lax.pmean(aux, dp_axes)
+
+    elif strategy == "tp":
+        in_specs = (
+            dp_spec,
+            P(),
+            P(None, fs, tp_axis),
+            P(None, fs, tp_axis),
+            P(None, tp_axis, fs),
+        )
+
+        def body(x_loc, router, wg, wu, wd):
+            wg, wu, wd = gather(wg, 1), gather(wu, 1), gather(wd, 2)
+            T = x_loc.shape[0]
+            C = capacity_for(cfg, T)
+            slot_tokens, slot_gates, aux = _dispatch(x_loc, router, k, C)
+            x_pad = jnp.concatenate([x_loc, jnp.zeros((1, d), x_loc.dtype)], axis=0)
+            y = _expert_ffn(x_pad[slot_tokens], wg, wu, wd)  # ff sliced -> partial d out
+            out = _combine(slot_tokens, slot_gates, y, T, d, x_loc.dtype)
+            out = jax.lax.psum(out, tp_axis)
+            return out, jax.lax.pmean(aux, dp_axes)
+
+    else:  # "a2a": explicit all-to-all expert dispatch (hillclimb variant)
+        # Tokens enter ALREADY split over (dp x model) — the layer activations
+        # are sequence-sharded over 'model' between layers, so no boundary
+        # gather is needed and the output returns sequence-sharded: the only
+        # MoE collectives are the two all-to-alls (EXPERIMENTS.md §Perf).
+        a2a_spec = P(dp_axes + (tp_axis,), None)
+        in_specs = (
+            a2a_spec,
+            P(),
+            P(tp_axis, fs, None),
+            P(tp_axis, fs, None),
+            P(tp_axis, None, fs),
+        )
+
+        def body(x_my, router, wg, wu, wd):
+            wg, wu, wd = gather(wg, 1), gather(wu, 1), gather(wd, 2)
+            Tm = x_my.shape[0]
+            C = capacity_for(cfg, Tm)
+            slot_tokens, slot_gates, aux = _dispatch(x_my, router, k, C)
+            x_pad = jnp.concatenate([x_my, jnp.zeros((1, d), x_my.dtype)], axis=0)
+            xg = x_pad[slot_tokens].reshape(M, E // M, C, d)
+            xr = jax.lax.all_to_all(xg, tp_axis, split_axis=0, concat_axis=0)
+            # xr[s]: tokens from source rank s destined for my local experts
+            xr = xr.transpose(1, 0, 2, 3).reshape(E // M, M * C, d)
+            y = _expert_ffn(xr, wg, wu, wd)  # [E/M, M*C, d]
+            y = y.reshape(E // M, M, C, d).transpose(1, 0, 2, 3)
+            yb = jax.lax.all_to_all(y, tp_axis, split_axis=0, concat_axis=0)
+            out_my = _combine(slot_tokens, slot_gates, yb.reshape(E, C, d), Tm, d, x_my.dtype)
+            return out_my, jax.lax.pmean(aux, dp_axes + (tp_axis,))
+
+        from jax.experimental.shard_map import shard_map
+
+        f = shard_map(
+            body,
+            mesh=mesh,
+            in_specs=in_specs,
+            out_specs=(a2a_spec, P()),
+            check_rep=False,
+        )
+        return f(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+
+    from jax.experimental.shard_map import shard_map
+
+    f = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=(dp_spec, P()),
+        check_rep=False,
+    )
+    return f(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])

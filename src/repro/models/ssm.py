@@ -1,0 +1,133 @@
+"""Selective SSM (Mamba-style) layer used by the Hymba hybrid architecture.
+
+Recurrent formulation with a diagonal state transition:
+    h_t = exp(dt_t * A) * h_{t-1} + (dt_t * B_t) * x_t        (per channel, N states)
+    y_t = C_t . h_t + D * x_t
+Prefill runs a sequential lax.scan over tokens (correctness baseline; a
+chunked associative scan is the perf variant tracked in EXPERIMENTS.md).
+Decode is a single O(1) state update — the property that lets hybrid archs
+serve the long_500k cell.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (
+    DEFAULT_DTYPE,
+    apply_norm,
+    chunked_recurrent_scan,
+    dense_init,
+    make_norm,
+)
+
+
+def _dims(cfg):
+    di = cfg.ssm.expand * cfg.d_model
+    dt_rank = cfg.ssm.dt_rank or max(1, math.ceil(cfg.d_model / 16))
+    return di, dt_rank, cfg.ssm.state_dim, cfg.ssm.conv_kernel
+
+
+def ssm_init(rng, cfg):
+    d = cfg.d_model
+    di, dt_rank, N, K = _dims(cfg)
+    ks = jax.random.split(rng, 6)
+    return {
+        "w_in": dense_init(ks[0], d, 2 * di),  # x and z (gate)
+        "conv_w": (jax.random.normal(ks[1], (K, di), jnp.float32) / math.sqrt(K)).astype(DEFAULT_DTYPE),
+        "w_xproj": dense_init(ks[2], di, dt_rank + 2 * N),
+        "w_dt": dense_init(ks[3], dt_rank, di),
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "A_log": jnp.log(jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (di, N))).copy(),
+        "D": jnp.ones((di,), jnp.float32),
+        "w_out": dense_init(ks[4], di, d),
+    }
+
+
+def ssm_state_init(cfg, batch: int):
+    di, _, N, K = _dims(cfg)
+    return {
+        "h": jnp.zeros((batch, di, N), jnp.float32),
+        "conv": jnp.zeros((batch, K - 1, di), DEFAULT_DTYPE),  # trailing inputs
+    }
+
+
+def _causal_conv(p, x, conv_state):
+    """Depthwise causal conv1d.  x: [B, S, di]; conv_state: [B, K-1, di]."""
+    K = p["conv_w"].shape[0]
+    xp = jnp.concatenate([conv_state, x], axis=1)  # [B, K-1+S, di]
+    out = sum(xp[:, i : i + x.shape[1]] * p["conv_w"][i] for i in range(K))
+    new_state = xp[:, -(K - 1) :] if K > 1 else conv_state
+    return jax.nn.silu(out), new_state
+
+
+def _ssm_coeffs(p, cfg, xc):
+    """xc: [B, S, di] post-conv activations -> (dA, dBx inputs, C)."""
+    di, dt_rank, N, _ = _dims(cfg)
+    proj = xc @ p["w_xproj"]  # [B, S, dt_rank + 2N]
+    dt_r, Bmat, Cmat = jnp.split(proj.astype(jnp.float32), [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(dt_r @ p["w_dt"].astype(jnp.float32) + p["dt_bias"])  # [B, S, di]
+    A = -jnp.exp(p["A_log"])  # [di, N]
+    dA = jnp.exp(dt[..., None] * A)  # [B, S, di, N]
+    dBx = (dt * xc.astype(jnp.float32))[..., None] * Bmat[..., None, :]  # [B, S, di, N]
+    return dA, dBx, Cmat
+
+
+def _constrain_channels(t, mesh, *, ch_dim=2):
+    """SSM layout: sequence replicated, channels (d_inner) sharded.
+
+    A recurrence is sequential over tokens, so sequence-sharded inputs force
+    a cross-shard exchange per scan step (measured: hymba train's dominant
+    collective, 1.7e3 s).  The recurrence is embarrassingly parallel over
+    channels instead: gather the sequence once per layer (~52 MB) and shard
+    d_inner over 'model'.
+    """
+    if mesh is None or "model" not in mesh.axis_names:
+        return t
+    from jax.sharding import PartitionSpec as P
+
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_n = 1
+    for a in dp:
+        dp_n *= mesh.shape[a]
+    tp_n = mesh.shape["model"]
+    spec = [None] * t.ndim
+    if t.shape[0] % dp_n == 0:
+        spec[0] = dp
+    if t.shape[ch_dim] % tp_n == 0:
+        spec[ch_dim] = "model"
+    return jax.lax.with_sharding_constraint(t, P(*spec))
+
+
+def ssm_forward(p, cfg, x, state, mesh=None):
+    """x: [B, S, d] -> (y [B, S, d], new_state). Sequential scan baseline."""
+    B, S, d = x.shape
+    di, _, N, _ = _dims(cfg)
+    xz = x @ p["w_in"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi = _constrain_channels(xi, mesh)
+    z = _constrain_channels(z, mesh)
+    xc, conv_state = _causal_conv(p, xi, state["conv"])
+    dA, dBx, Cmat = _ssm_coeffs(p, cfg, xc)
+
+    def step(h, inp):
+        dA_t, dBx_t, C_t = inp
+        h = dA_t * h + dBx_t
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    to_s = lambda a: jnp.moveaxis(a, 1, 0)
+    h, ys = chunked_recurrent_scan(
+        step, state["h"], (to_s(dA), to_s(dBx), to_s(Cmat)), chunk=128
+    )  # ys [S, B, di]
+    y = ys.transpose(1, 0, 2) + p["D"] * xc.astype(jnp.float32)
+    out = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["w_out"]
+    return out, {"h": h, "conv": conv_state}
+
+
+def ssm_decode(p, cfg, x, state, mesh=None):
+    """Single-token step.  x: [B, 1, d]."""
+    return ssm_forward(p, cfg, x, state, mesh=mesh)

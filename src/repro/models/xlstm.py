@@ -1,0 +1,322 @@
+"""xLSTM LM — mLSTM (matrix-memory) + sLSTM (scalar-memory) blocks.
+
+Beck et al., arXiv:2405.04517.  The 350M config is stacked as xLSTM[7:1]:
+groups of (7 mLSTM + 1 sLSTM).  Scanning over *groups* keeps lax.scan
+uniform despite the heterogeneous block mix.
+
+Both block types are implemented in their stabilized-exponential-gating
+recurrent form (log-space max-stabilizer m).  The recurrent form is the
+correctness baseline; a chunkwise-parallel mLSTM is the natural MXU
+optimization and is tracked in EXPERIMENTS.md §Perf.  Decode is O(1) in
+context length — this is why xlstm-350m runs the long_500k cell.
+
+A ResidentClaim on an xLSTM context covers the (C, n, m) matrix-memory
+snapshot rather than KV blocks (DESIGN.md §4): predicate
+``state_at_token(k)``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (
+    DEFAULT_DTYPE,
+    apply_norm,
+    chunked_cross_entropy,
+    chunked_recurrent_scan,
+    constrain_activations,
+    dense_init,
+    embed_init,
+    make_norm,
+    rms_norm,
+)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(rng, cfg):
+    d, nh = cfg.d_model, cfg.num_heads
+    ks = jax.random.split(rng, 8)
+    return {
+        "ln": make_norm(cfg.norm, ks[0], d),
+        "wq": dense_init(ks[1], d, d),
+        "wk": dense_init(ks[2], d, d),
+        "wv": dense_init(ks[3], d, d),
+        "wi": dense_init(ks[4], d, nh),
+        "wf": dense_init(ks[5], d, nh),
+        "wg": dense_init(ks[6], d, d),
+        "wo": dense_init(ks[7], d, d),
+        "hnorm": jnp.ones((nh, d // nh), DEFAULT_DTYPE),
+        "fb": jnp.ones((nh,), jnp.float32) * 3.0,  # forget-gate bias (open)
+    }
+
+
+def mlstm_state(cfg, batch: int):
+    nh, dh = cfg.num_heads, cfg.d_model // cfg.num_heads
+    return {
+        "C": jnp.zeros((batch, nh, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, nh, dh), jnp.float32),
+        "m": jnp.full((batch, nh), -1e30, jnp.float32),
+    }
+
+
+def _mlstm_step(state, q, k, v, log_i, log_f):
+    """One recurrent step.  q,k,v: [B, nh, dh]; gates: [B, nh]."""
+    C, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(log_f + m, log_i)
+    decay = jnp.exp(log_f + m - m_new)
+    inp = jnp.exp(log_i - m_new)
+    kv = k[..., :, None] * v[..., None, :]  # [B, nh, dh, dh]
+    C = decay[..., None, None] * C + inp[..., None, None] * kv
+    n = decay[..., None] * n + inp[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n)), jnp.exp(-m_new))
+    h = num / den[..., None]
+    return {"C": C, "n": n, "m": m_new}, h
+
+
+def _seq_replicated(t, mesh, *, shard_last=False):
+    """Recurrences are sequential over tokens: keep the sequence axis
+    replicated per layer (one ~MB-scale gather) and shard the value/state
+    channel dim where divisible — the same channel-parallel layout as the
+    hymba SSM (EXPERIMENTS.md §Perf), avoiding a per-token cross-shard
+    exchange in the 4096-step scan."""
+    if mesh is None or "model" not in mesh.axis_names:
+        return t
+    from jax.sharding import PartitionSpec as P
+
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_n = 1
+    for a in dp:
+        dp_n *= mesh.shape[a]
+    spec = [None] * t.ndim
+    if t.shape[0] % dp_n == 0:
+        spec[0] = dp
+    if shard_last and t.shape[-1] % mesh.shape["model"] == 0:
+        spec[-1] = "model"
+    return jax.lax.with_sharding_constraint(t, P(*spec))
+
+
+def _mlstm_qkvif(p, cfg, x, mesh=None):
+    B, S, d = x.shape
+    nh, dh = cfg.num_heads, d // cfg.num_heads
+    xn = apply_norm(cfg.norm, p["ln"], x)
+    q = (xn @ p["wq"]).reshape(B, S, nh, dh).astype(jnp.float32)
+    k = (xn @ p["wk"]).reshape(B, S, nh, dh).astype(jnp.float32) / jnp.sqrt(dh)
+    v = (xn @ p["wv"]).reshape(B, S, nh, dh).astype(jnp.float32)
+    q = _seq_replicated(q, mesh)
+    k = _seq_replicated(k, mesh)
+    v = _seq_replicated(v, mesh, shard_last=True)  # C state shards over dv
+    log_i = _seq_replicated((xn @ p["wi"]).astype(jnp.float32), mesh)
+    log_f = _seq_replicated(
+        jax.nn.log_sigmoid((xn @ p["wf"]).astype(jnp.float32) + p["fb"]), mesh
+    )
+    gate = jax.nn.silu(xn @ p["wg"])
+    return xn, q, k, v, log_i, log_f, gate
+
+
+def mlstm_forward(p, cfg, x, state, mesh=None):
+    """Sequence forward (recurrent scan).  x: [B, S, d]."""
+    B, S, d = x.shape
+    nh, dh = cfg.num_heads, d // cfg.num_heads
+    xn, q, k, v, log_i, log_f, gate = _mlstm_qkvif(p, cfg, x, mesh=mesh)
+
+    def step(st, inp):
+        qt, kt, vt, it, ft = inp
+        st, h = _mlstm_step(st, qt, kt, vt, it, ft)
+        return st, h
+
+    to_s = lambda a: jnp.moveaxis(a, 1, 0)  # [B, S, ...] -> [S, B, ...]
+    xs = (to_s(q), to_s(k), to_s(v), to_s(log_i), to_s(log_f))
+    state, hs = chunked_recurrent_scan(step, state, xs, chunk=cfg.xlstm.chunk_size)
+    h = hs.transpose(1, 0, 2, 3)
+    h = rms_norm(h, p["hnorm"]).reshape(B, S, d).astype(x.dtype)
+    out = (h * gate) @ p["wo"]
+    return x + out, state
+
+
+def mlstm_decode(p, cfg, x, state, mesh=None):
+    """Single-token step.  x: [B, 1, d]."""
+    out, state = mlstm_forward(p, cfg, x, state, mesh=mesh)
+    return out, state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(rng, cfg):
+    d, nh = cfg.d_model, cfg.num_heads
+    dh = d // nh
+    ks = jax.random.split(rng, 10)
+    r = lambda k: (jax.random.normal(k, (nh, dh, dh), jnp.float32) / jnp.sqrt(dh)).astype(DEFAULT_DTYPE)
+    return {
+        "ln": make_norm(cfg.norm, ks[0], d),
+        "wi": dense_init(ks[1], d, d),
+        "wf": dense_init(ks[2], d, d),
+        "wz": dense_init(ks[3], d, d),
+        "wo": dense_init(ks[4], d, d),
+        "ri": r(ks[5]),
+        "rf": r(ks[6]),
+        "rz": r(ks[7]),
+        "ro": r(ks[8]),
+        "hnorm": jnp.ones((nh, dh), DEFAULT_DTYPE),
+        "wproj": dense_init(ks[9], d, d),
+        "fb": jnp.ones((d,), jnp.float32) * 3.0,
+    }
+
+
+def slstm_state(cfg, batch: int):
+    d = cfg.d_model
+    return {
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.full((batch, d), -1e30, jnp.float32),
+    }
+
+
+def _slstm_step(p, cfg, st, xi, xf, xz, xo):
+    """xi/xf/xz/xo: [B, d] pre-activations from the input projections."""
+    B, d = xi.shape
+    nh = cfg.num_heads
+    dh = d // nh
+    h = st["h"].reshape(B, nh, dh)
+    rec = lambda R: jnp.einsum("bhd,hde->bhe", h, R.astype(jnp.float32)).reshape(B, d)
+    i_raw = xi + rec(p["ri"])
+    f_raw = xf + rec(p["rf"]) + p["fb"]
+    z = jnp.tanh(xz + rec(p["rz"]))
+    o = jax.nn.sigmoid(xo + rec(p["ro"]))
+    log_i, log_f = i_raw, jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(log_f + st["m"], log_i)
+    decay = jnp.exp(log_f + st["m"] - m_new)
+    inp = jnp.exp(log_i - m_new)
+    c = decay * st["c"] + inp * z
+    n = decay * st["n"] + inp
+    h_new = o * c / jnp.maximum(n, 1e-6)
+    return {"h": h_new, "c": c, "n": n, "m": m_new}, h_new
+
+
+def slstm_forward(p, cfg, x, state, mesh=None):
+    B, S, d = x.shape
+    nh = cfg.num_heads
+    xn = apply_norm(cfg.norm, p["ln"], x)
+    xi = _seq_replicated((xn @ p["wi"]).astype(jnp.float32), mesh)
+    xf = _seq_replicated((xn @ p["wf"]).astype(jnp.float32), mesh)
+    xz = _seq_replicated((xn @ p["wz"]).astype(jnp.float32), mesh)
+    xo = _seq_replicated((xn @ p["wo"]).astype(jnp.float32), mesh)
+
+    def step(st, inp):
+        st, h = _slstm_step(p, cfg, st, *inp)
+        return st, h
+
+    to_s = lambda a: jnp.moveaxis(a, 1, 0)
+    state, hs = chunked_recurrent_scan(
+        step, state, (to_s(xi), to_s(xf), to_s(xz), to_s(xo)), chunk=cfg.xlstm.chunk_size
+    )
+    h = hs.transpose(1, 0, 2).reshape(B, S, nh, d // nh)
+    h = rms_norm(h, p["hnorm"]).reshape(B, S, d).astype(x.dtype)
+    return x + h @ p["wproj"], state
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+
+def _group_counts(cfg) -> Tuple[int, int, int]:
+    per_group = cfg.xlstm.mlstm_per_group + cfg.xlstm.slstm_per_group
+    assert cfg.num_layers % per_group == 0, "num_layers must tile into xLSTM groups"
+    return cfg.num_layers // per_group, cfg.xlstm.mlstm_per_group, cfg.xlstm.slstm_per_group
+
+
+def init_params(cfg, rng):
+    G, nm, ns = _group_counts(cfg)
+    k_embed, k_m, k_s, k_f = jax.random.split(rng, 4)
+
+    def group_m(k):
+        return jax.vmap(lambda kk: mlstm_init(kk, cfg))(jax.random.split(k, nm))
+
+    def group_s(k):
+        return jax.vmap(lambda kk: slstm_init(kk, cfg))(jax.random.split(k, ns))
+
+    return {
+        "embed": embed_init(k_embed, cfg.vocab_size, cfg.d_model),
+        "mlstm": jax.vmap(group_m)(jax.random.split(k_m, G)),  # [G, nm, ...]
+        "slstm": jax.vmap(group_s)(jax.random.split(k_s, G)),  # [G, ns, ...]
+        "final_norm": make_norm(cfg.norm, k_f, cfg.d_model),
+    }
+
+
+def init_state(cfg, batch: int):
+    G, nm, ns = _group_counts(cfg)
+    tile = lambda tree, n: jax.tree.map(lambda a: jnp.broadcast_to(a, (G, n) + a.shape).copy(), tree)
+    return {
+        "mlstm": tile(mlstm_state(cfg, batch), nm),
+        "slstm": tile(slstm_state(cfg, batch), ns),
+    }
+
+
+def _stack_forward(params, cfg, x, state, mesh=None):
+    """Scan over groups; inner scans over the uniform m/s block stacks."""
+
+    def group(carry, xs):
+        x, = carry
+        gp_m, gp_s, st_m, st_s = xs
+
+        def m_block(c, inner):
+            x, = c
+            bp, bst = inner
+            x, nst = mlstm_forward(bp, cfg, x, bst, mesh=mesh)
+            return (constrain_activations(x, mesh),), nst
+
+        (x,), nst_m = jax.lax.scan(m_block, (x,), (gp_m, st_m))
+
+        def s_block(c, inner):
+            x, = c
+            bp, bst = inner
+            x, nst = slstm_forward(bp, cfg, x, bst, mesh=mesh)
+            return (constrain_activations(x, mesh),), nst
+
+        (x,), nst_s = jax.lax.scan(s_block, (x,), (gp_s, st_s))
+        return (x,), (nst_m, nst_s)
+
+    (x,), (nst_m, nst_s) = jax.lax.scan(
+        group, (x,), (params["mlstm"], params["slstm"], state["mlstm"], state["slstm"])
+    )
+    return x, {"mlstm": nst_m, "slstm": nst_s}
+
+
+def loss_fn(params, cfg, batch, mesh=None, **_):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    x, _ = _stack_forward(params, cfg, x, init_state(cfg, B), mesh=mesh)
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    labels = jnp.concatenate([tokens[:, 1:], jnp.full((B, 1), -1, tokens.dtype)], axis=1)
+    return chunked_cross_entropy(x, params["embed"].T, labels)
+
+
+def prefill(params, cfg, batch, cache_len: int = 0, mesh=None, **_):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    x, state = _stack_forward(params, cfg, x, init_state(cfg, B), mesh=mesh)
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    logits = (x[:, -1] @ params["embed"].T).astype(jnp.float32)
+    return logits, state
+
+
+def decode_step(params, cfg, state, tokens, cur_pos, mesh=None, **_):
+    B = tokens.shape[0]
+    x = params["embed"][tokens][:, None, :]
+    x, state = _stack_forward(params, cfg, x, state, mesh=mesh)
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    logits = (x[:, 0] @ params["embed"].T).astype(jnp.float32)
+    return logits, state

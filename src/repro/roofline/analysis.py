@@ -1,0 +1,217 @@
+"""Three-term roofline model from the compiled dry-run artifact.
+
+  compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+  memory term     = HLO_bytes / (chips x HBM_bw)
+  collective term = collective_bytes / (chips x link_bw)
+
+``compiled.cost_analysis()`` supplies FLOPs and bytes for the PER-DEVICE
+SPMD program, so the per-chip division is already implicit; we report both
+the per-device quantities and the global (x chips) ones.  collective_bytes
+is NOT in cost_analysis — we parse the (per-device) HLO text and sum the
+result-shape bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute instruction (async -start variants counted
+once, -done skipped).
+
+Hardware constants (TPU v5e class, per the assignment):
+  197 TFLOP/s bf16 per chip; 819 GB/s HBM; ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+HW = {
+    "peak_flops": 197e12,  # bf16 per chip
+    "hbm_bw": 819e9,  # bytes/s per chip
+    "link_bw": 50e9,  # bytes/s per ICI link
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# one HLO instruction result, e.g. ``bf16[2,4096,768]{2,1,0}`` (repeated for
+# tuple results); then the op name.
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(",
+)
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Per-device bytes by collective kind (result-shape convention),
+    flat count — each instruction counted once regardless of loops."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    out["total"] = 0
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        nbytes = _shape_bytes(m.group(1))
+        kind = m.group(2)
+        out[kind] += nbytes
+        out["total"] += nbytes
+    return out
+
+
+_COMP_HEAD_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_WHILE_COND_RE = re.compile(r"\bwhile\(.*?condition=%?([\w.\-]+)")
+_WHILE_BODY_RE = re.compile(r"\bwhile\(.*?body=%?([\w.\-]+)")
+_CALL_RE = re.compile(r"(?:fusion|call)\(.*?(?:calls|to_apply)=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def collective_bytes_with_trip_counts(hlo_text: str) -> Dict[str, int]:
+    """Loop-aware collective accounting.
+
+    ``lax.scan`` lowers to ``while`` whose body runs ``trip_count`` times —
+    a flat count under-counts every per-layer collective by L x.  We parse
+    the computation graph, recover trip counts from the s32 bound constants
+    in each loop condition, and multiply recursively (nested scans compose).
+    """
+    # split into computations
+    comps: Dict[str, list] = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        if not line.startswith(" ") and ("->" in line) and ("{" in line):
+            m = _COMP_HEAD_RE.match(line.strip())
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                if line.startswith("ENTRY"):
+                    entry = cur
+                continue
+        if cur is not None and line.strip().startswith("%") or (cur and "ROOT" in line):
+            comps[cur].append(line)
+
+    def trip_count(cond_name: str) -> int:
+        consts = [int(c) for l in comps.get(cond_name, []) for c in _CONST_RE.findall(l)]
+        big = [c for c in consts if c > 1]
+        return max(big) if big else 1
+
+    memo: Dict[str, Dict[str, int]] = {}
+
+    def total(comp: str) -> Dict[str, int]:
+        if comp in memo:
+            return memo[comp]
+        acc = {k: 0 for k in _COLLECTIVES}
+        memo[comp] = acc  # break cycles defensively
+        for line in comps.get(comp, ()):
+            m = _INSTR_RE.search(line)
+            if m:
+                acc[m.group(2)] += _shape_bytes(m.group(1))
+            wc = _WHILE_COND_RE.search(line)
+            wb = _WHILE_BODY_RE.search(line)
+            if wc and wb:
+                n = trip_count(wc.group(1))
+                sub = total(wb.group(1))
+                for k in _COLLECTIVES:
+                    acc[k] += n * sub[k]
+                continue
+            c = _CALL_RE.search(line)
+            if c and c.group(1) in comps:
+                sub = total(c.group(1))
+                for k in _COLLECTIVES:
+                    acc[k] += sub[k]
+        memo[comp] = acc
+        return acc
+
+    if entry is None:
+        out = collective_bytes_from_hlo(hlo_text)
+        return out
+    acc = total(entry)
+    acc = dict(acc)
+    acc["total"] = sum(acc[k] for k in _COLLECTIVES)
+    return acc
+
+
+@dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    model_flops: float
+    useful_flops_ratio: float
+    chips: int
+
+    def to_dict(self) -> Dict[str, float]:
+        return dict(
+            compute_s=self.compute_s,
+            memory_s=self.memory_s,
+            collective_s=self.collective_s,
+            dominant=self.dominant,
+            flops_per_device=self.flops_per_device,
+            bytes_per_device=self.bytes_per_device,
+            collective_bytes_per_device=self.collective_bytes_per_device,
+            model_flops=self.model_flops,
+            useful_flops_ratio=self.useful_flops_ratio,
+            chips=self.chips,
+        )
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE), D = tokens/step."""
+    n = cfg.active_param_count() if cfg.moe.num_experts else cfg.param_count()
+    tokens = shape.tokens_per_step
+    factor = 6.0 if shape.kind == "train" else 2.0  # fwd-only for serving
+    return factor * n * tokens
+
+
+def roofline_report(
+    *,
+    flops_per_device: float,
+    bytes_per_device: float,
+    collective_bytes_per_device: float,
+    chips: int,
+    model_flops: float,
+) -> RooflineTerms:
+    compute = flops_per_device / HW["peak_flops"]
+    memory = bytes_per_device / HW["hbm_bw"]
+    coll = collective_bytes_per_device / HW["link_bw"]
+    terms = {"compute": compute, "memory": memory, "collective": coll}
+    dominant = max(terms, key=terms.get)
+    total_flops = flops_per_device * chips
+    ratio = model_flops / total_flops if total_flops else 0.0
+    return RooflineTerms(
+        compute_s=compute,
+        memory_s=memory,
+        collective_s=coll,
+        dominant=dominant,
+        flops_per_device=flops_per_device,
+        bytes_per_device=bytes_per_device,
+        collective_bytes_per_device=collective_bytes_per_device,
+        model_flops=model_flops,
+        useful_flops_ratio=ratio,
+        chips=chips,
+    )

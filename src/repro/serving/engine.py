@@ -1,0 +1,559 @@
+"""Claim-native serving engine: scheduler, request lifecycle, witness paths.
+
+This is the runtime the paper's patched-vLLM witness *demonstrates the
+implementability of* — here built natively (DESIGN.md §2).  The decisive
+property is the ordered, claim-scoped path:
+
+  accept(C, P, leading_prefix_at_least(k)) -> materialized(C) ->
+  offloaded(C) -> restore_required(C) -> same-claim load failure ->
+  scheduler_resident_claim_restoration_failed(C) ->
+  scheduler_active_request_refused(blocking_claim_ids=[C]) ->
+  ... before terminal request-finished handling.
+
+Generic transfer counters, fallback recomputation, wrong-claim failure, or
+unclaimed failure never produce these events (fail-closed); the analyzer
+(core/analyzer.py) and the repetition gates (benchmarks) check exactly this.
+
+The engine runs a REAL JAX model: cached/restored block payloads are the
+bytes decode attends over, so a failed restore genuinely leaves the request
+without its claimed KV (no fallback recompute is attempted for claim-scoped
+restoration failure — that is the fail-closed semantics).
+"""
+from __future__ import annotations
+
+import itertools
+import math
+import time
+from dataclasses import dataclass, field
+from functools import lru_cache
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@lru_cache(maxsize=16)
+def _jitted_steps(bundle, cache_len: int):
+    """Shared jitted prefill/decode per (bundle, cache_len): repetition
+    harnesses spin up hundreds of engines over the same model — recompiling
+    per engine would dominate the run."""
+    return (
+        jax.jit(lambda p, b: bundle.prefill_fn(p, b, cache_len)),
+        jax.jit(bundle.decode_fn),
+    )
+
+from repro.core.claims import (
+    CacheIdentity,
+    ClaimMode,
+    ClaimRegistry,
+    ClaimState,
+    MaterializationPredicate,
+    ResidentClaim,
+)
+from repro.core.events import EventLog
+from repro.serving.kv_cache import (
+    BlockPool,
+    HostPool,
+    KVBlock,
+    PoolExhausted,
+    chain_hash,
+    prefix_object_id,
+)
+from repro.serving.offload import FailureInjectionConfig, OffloadingConnector
+
+
+@dataclass
+class Request:
+    request_id: str
+    tokens: Tuple[int, ...]
+    max_new_tokens: int = 4
+    status: str = "pending"  # pending | running | finished | refused | error
+    output_tokens: List[int] = field(default_factory=list)
+    error: str = ""
+    cached_tokens: int = 0
+    restored_tokens: int = 0
+
+
+@dataclass
+class SchedulerOutcome:
+    """Claim-scoped outcome record attached to a terminal request state."""
+
+    kind: str
+    claim_ids: List[str] = field(default_factory=list)
+    reason: str = ""
+
+
+class Scheduler:
+    """Claim-aware admission + invalid-KV-load outcome boundary."""
+
+    def __init__(self, registry: ClaimRegistry, pool: BlockPool, events: EventLog):
+        self.registry = registry
+        self.pool = pool
+        self._events = events
+
+    def protected_claim_ids(self) -> Set[str]:
+        return {
+            c.claim_id
+            for c in self.registry.active_claims()
+            if c.mode == ClaimMode.HARD_PROTECTED
+        }
+
+    # -- explicit active/resident conflict action (hard_protected) -----------
+    def admission_check(self, request: Request, needed_blocks: int) -> Optional[SchedulerOutcome]:
+        free = self.pool.free_slots
+        if free >= needed_blocks:
+            return None
+        protected = self.protected_claim_ids()
+        evictable = len(self.pool.victim_candidates(protected))
+        if free + evictable >= needed_blocks:
+            return None
+        blocking = sorted(
+            {
+                c
+                for blk in self.pool.blocks.values()
+                if blk.ref == 0
+                for c in blk.claim_ids & protected
+            }
+        )
+        self._events.emit(
+            "scheduler_admission_refused",
+            request_id=request.request_id,
+            blocking_claim_ids=blocking,
+            needed_blocks=needed_blocks,
+            free_blocks=free,
+            evictable_blocks=evictable,
+            conflict_action="refuse",
+        )
+        return SchedulerOutcome("admission_refused", blocking, "active/resident conflict")
+
+    # -- the invalid-KV-load boundary (witness path B, E12/E13) ----------------
+    def on_invalid_kv_load(
+        self, request: Request, failed_claims: List[ResidentClaim], reason: str
+    ) -> SchedulerOutcome:
+        blocking = []
+        for claim in failed_claims:
+            claim.transition(ClaimState.RESTORATION_FAILED)
+            self._events.emit(
+                "scheduler_resident_claim_restoration_failed",
+                request_id=request.request_id,
+                claim_id=claim.claim_id,
+                object_id=claim.object_id,
+                reason=reason,
+                request_status="FINISHED_ERROR",
+            )
+            blocking.append(claim.claim_id)
+        self._events.emit(
+            "scheduler_active_request_refused",
+            request_id=request.request_id,
+            blocking_claim_ids=blocking,
+            reason=reason,
+        )
+        return SchedulerOutcome("active_request_refused", blocking, reason)
+
+    # -- pressure with ordered demotion-before-loss ------------------------------
+    def apply_pressure(self, n_blocks: int) -> List[KVBlock]:
+        protected = self.protected_claim_ids()
+        victims = self.pool.victim_candidates(protected)[:n_blocks]
+        if len(victims) < n_blocks:
+            blocking = sorted(
+                {
+                    c
+                    for blk in self.pool.blocks.values()
+                    if blk.ref == 0
+                    for c in blk.claim_ids & protected
+                }
+            )
+            raise PoolExhausted(f"pressure needs {n_blocks} blocks", blocking)
+        # ordered: demote demotable claims BEFORE their blocks are lost
+        demoted: Set[str] = set()
+        for blk in victims:
+            for cid in sorted(blk.claim_ids):
+                claim = self.registry.maybe_get(cid)
+                if claim and claim.mode == ClaimMode.DEMOTABLE and cid not in demoted:
+                    if claim.state in (ClaimState.ACCEPTED, ClaimState.MATERIALIZED, ClaimState.RESTORED):
+                        self.registry.mark(
+                            claim,
+                            ClaimState.DEMOTED,
+                            "resident_claim_demoted",
+                            before_loss=True,
+                            trigger="pressure",
+                        )
+                        demoted.add(cid)
+        out = []
+        for blk in victims:
+            self._events.emit(
+                "pressure_eviction",
+                block_id=blk.block_id,
+                priority=blk.priority,
+                claim_id=sorted(blk.claim_ids)[0] if blk.claim_ids else None,
+            )
+            out.append(self.pool.remove(blk.block_id, reason="pressure"))
+        # harm attribution: predicate-breaking loss of still-responsible claims
+        lost_claims: Set[str] = {c for blk in out for c in blk.claim_ids}
+        for cid in sorted(lost_claims):
+            claim = self.registry.maybe_get(cid)
+            if claim and claim.state == ClaimState.MATERIALIZED:
+                self.registry.mark(
+                    claim,
+                    ClaimState.HARMED,
+                    "resident_claim_harmed",
+                    predicate=claim.predicate.name,
+                    cause="pressure_eviction",
+                )
+        return out
+
+    def sweep_expiry(self, now: Optional[float] = None) -> List[ResidentClaim]:
+        return self.registry.expire_due(now)
+
+
+class ServingEngine:
+    """Single-replica claim-native engine over a real JAX model."""
+
+    def __init__(
+        self,
+        bundle,
+        params,
+        *,
+        block_size: int = 8,
+        device_blocks: int = 64,
+        cache_len: int = 128,
+        event_log: Optional[EventLog] = None,
+        injection: Optional[FailureInjectionConfig] = None,
+        namespace: str = "default",
+    ):
+        self.bundle = bundle
+        self.cfg = bundle.cfg
+        self.params = params
+        self.block_size = block_size
+        self.cache_len = cache_len
+        self.events = event_log or EventLog()
+        self.identity = CacheIdentity(
+            model=self.cfg.name,
+            tokenizer_hash="synthetic-tokenizer-v1",
+            namespace=namespace,
+            block_size=block_size,
+        )
+        self.registry = ClaimRegistry(self.events, self.identity)
+        self.pool = BlockPool(device_blocks, self.events)
+        self.host = HostPool()
+        self.connector = OffloadingConnector(self.pool, self.host, self.events, injection)
+        self.scheduler = Scheduler(self.registry, self.pool, self.events)
+        self._req_ids = itertools.count()
+        self.requests: Dict[str, Request] = {}
+        self._claim_prefixes: Dict[str, Tuple[int, ...]] = {}
+        self._jit_prefill, self._jit_decode = _jitted_steps(bundle, cache_len)
+
+    # ------------------------------------------------------------------ claims
+    def accept_claim(
+        self,
+        prefix_tokens: Sequence[int],
+        mode: ClaimMode,
+        *,
+        predicate_k: Optional[int] = None,
+        priority: int = 0,
+        duration_s: Optional[float] = None,
+    ) -> ResidentClaim:
+        prefix = tuple(int(t) for t in prefix_tokens)
+        usable = len(prefix) - len(prefix) % self.block_size
+        k = predicate_k if predicate_k is not None else usable
+        object_id = prefix_object_id(prefix, self.block_size)
+        claim = self.registry.accept(
+            object_id,
+            MaterializationPredicate("leading_prefix_at_least", k),
+            mode,
+            priority=priority,
+            duration_s=duration_s,
+            max_prefix_window=self.cfg.sliding_window or None,
+        )
+        self._claim_prefixes[claim.claim_id] = prefix
+        return claim
+
+    def _claims_on_chain(self, chains: Sequence[str]) -> List[ResidentClaim]:
+        """Claims whose object chain terminates in one of these block chains."""
+        chain_set = set(chains)
+        return [
+            c
+            for c in self.registry.all_claims()
+            if prefix_object_id(self._claim_prefixes.get(c.claim_id, ()), self.block_size)
+            in chain_set
+        ]
+
+    def _claims_covering_block(self, chain: str, block_index: int) -> Set[str]:
+        """Claim ids whose prefix includes the block at this chain position."""
+        out = set()
+        for cid, prefix in self._claim_prefixes.items():
+            nblocks = len(prefix) // self.block_size
+            if block_index < nblocks:
+                h = ""
+                for i in range(block_index + 1):
+                    h = chain_hash(h, prefix[i * self.block_size : (i + 1) * self.block_size])
+                if h == chain:
+                    out.add(cid)
+        return out
+
+    # ---------------------------------------------------------------- requests
+    def submit(self, tokens: Sequence[int], max_new_tokens: int = 4) -> Request:
+        req = Request(
+            request_id=f"req-{next(self._req_ids):04d}",
+            tokens=tuple(int(t) for t in tokens),
+            max_new_tokens=max_new_tokens,
+        )
+        self.requests[req.request_id] = req
+        claims = [
+            c.claim_id
+            for c in self.registry.active_claims()
+            if self._claim_prefixes.get(c.claim_id, (None,)) == req.tokens[: len(self._claim_prefixes.get(c.claim_id, ()))]
+        ]
+        self.events.emit(
+            "request_initialized",
+            request_id=req.request_id,
+            n_tokens=len(req.tokens),
+            claim_metadata=sorted(claims),
+        )
+        return req
+
+    # ------------------------------------------------------------ cache plumbing
+    def _dense_cache(self, blocks: List[KVBlock], batch: int = 1):
+        cache = self.bundle.make_cache(batch, self.cache_len)
+        if not blocks:
+            return cache, 0
+        k = np.concatenate([b.k for b in blocks], axis=1)  # [L, n_tok, KV, Dh]
+        v = np.concatenate([b.v for b in blocks], axis=1)
+        pos = np.concatenate([b.positions for b in blocks])
+        n = k.shape[1]
+        cache["k"] = cache["k"].at[:, 0, :n].set(jnp.asarray(k))
+        cache["v"] = cache["v"].at[:, 0, :n].set(jnp.asarray(v))
+        cache["pos"] = cache["pos"].at[0, :n].set(jnp.asarray(pos))
+        return cache, n
+
+    def _store_prefix_blocks(self, req: Request, cache, upto: int) -> List[KVBlock]:
+        """Slice the request's prefill KV into reusable prompt blocks."""
+        created = []
+        h = ""
+        protected = self.scheduler.protected_claim_ids()
+        ck = np.asarray(cache["k"][:, 0])  # [L, S, KV, Dh]
+        cv = np.asarray(cache["v"][:, 0])
+        for bi in range(upto // self.block_size):
+            lo, hi = bi * self.block_size, (bi + 1) * self.block_size
+            btoks = req.tokens[lo:hi]
+            h = chain_hash(h, btoks)
+            if h in self.pool.prefix_index:
+                continue  # already resident (shared prefix)
+            claim_ids = self._claims_covering_block(h, bi)
+            prio = max(
+                [self.registry.get(c).priority for c in claim_ids],
+                default=0,
+            )
+            blk = self.pool.add_block(
+                btoks,
+                h,
+                ck[:, lo:hi],
+                cv[:, lo:hi],
+                np.arange(lo, hi),
+                priority=prio,
+                claim_ids=claim_ids,
+                protected_claims=protected,
+            )
+            created.append(blk)
+        return created
+
+    def _materialize_claims(self, req: Request, materialized_tokens: int) -> None:
+        """Named observation point: prefill_complete."""
+        for claim in self.registry.active_claims():
+            prefix = self._claim_prefixes.get(claim.claim_id)
+            if prefix is None or req.tokens[: len(prefix)] != prefix:
+                continue
+            if claim.state != ClaimState.ACCEPTED:
+                continue
+            if claim.predicate.evaluate(materialized_tokens):
+                nblocks = len(prefix) // self.block_size
+                bytes_per_block = next(
+                    (b.nbytes for b in self.pool.blocks.values()), 0
+                )
+                claim.footprint_bytes = nblocks * bytes_per_block
+                self.registry.mark(
+                    claim,
+                    ClaimState.MATERIALIZED,
+                    "claim_materialized",
+                    predicate=claim.predicate.name,
+                    observation_point="prefill_complete",
+                    materialized_tokens=materialized_tokens,
+                    request_id=req.request_id,
+                )
+                self.events.emit(
+                    "claim_footprint_accounted",
+                    claim_id=claim.claim_id,
+                    footprint_bytes=claim.footprint_bytes,
+                    n_blocks=nblocks,
+                )
+
+    # ---------------------------------------------------------------- offload
+    def offload_claim(self, claim_id: str, request_id: Optional[str] = None) -> bool:
+        """Move a materialized claim's blocks device -> host (witness step 2)."""
+        claim = self.registry.get(claim_id)
+        prefix = self._claim_prefixes[claim_id]
+        blocks = self.pool.lookup_prefix(prefix, self.block_size)
+        nblocks = len(prefix) // self.block_size
+        if len(blocks) < nblocks:
+            return False
+        job = self.connector.store(blocks[:nblocks], claim_id=claim_id, request_id=request_id)
+        if job.ok:
+            self.registry.mark(
+                claim,
+                ClaimState.OFFLOADED,
+                "resident_claim_offloaded",
+                n_blocks=nblocks,
+                request_id=request_id,
+            )
+        self.connector.complete_job(job)
+        return job.ok
+
+    # ---------------------------------------------------------------- execution
+    def run(self, req: Request) -> Request:
+        """Execute a request to completion (prefill + greedy decode)."""
+        req.status = "running"
+        total_needed = math.ceil((len(req.tokens) + req.max_new_tokens) / self.block_size)
+
+        # --- expiry boundary sweep precedes scheduling ---
+        self.scheduler.sweep_expiry()
+
+        # --- explicit active/resident conflict action (admission) ---
+        refusal = self.scheduler.admission_check(req, total_needed)
+        if refusal is not None:
+            req.status = "refused"
+            req.error = refusal.reason
+            self.events.emit(
+                "request_finished", request_id=req.request_id, status="REFUSED_ADMISSION"
+            )
+            return req
+
+        # --- device-resident prefix reuse ---
+        dev_blocks = self.pool.lookup_prefix(req.tokens, self.block_size)
+
+        # --- host-side (offloaded) continuation: the restore-before-reuse path ---
+        host_blocks = self.connector.lookup(
+            req.tokens,
+            self.block_size,
+            req.request_id,
+            skip_blocks=len(dev_blocks),
+            start_chain=dev_blocks[-1].chain if dev_blocks else "",
+        )
+
+        if host_blocks:
+            chains = [b.chain for b in host_blocks]
+            restore_claims = [
+                c
+                for c in self._claims_on_chain(chains)
+                if c.state == ClaimState.OFFLOADED
+            ]
+            for claim in restore_claims:
+                self.registry.mark(
+                    claim,
+                    ClaimState.RESTORE_REQUIRED,
+                    "resident_claim_restore_required",
+                    request_id=req.request_id,
+                    predicate=claim.predicate.name,
+                )
+            claim_id = restore_claims[0].claim_id if restore_claims else None
+            job = self.connector.load(
+                host_blocks,
+                claim_id=claim_id,
+                request_id=req.request_id,
+                protected_claims=self.scheduler.protected_claim_ids(),
+            )
+            if not job.ok:
+                if restore_claims:
+                    # scheduler invalid-KV-load boundary: claim-scoped,
+                    # fail-closed, ordered BEFORE terminal handling (path B)
+                    outcome = self.scheduler.on_invalid_kv_load(
+                        req,
+                        [c for c in restore_claims if c.state == ClaimState.RESTORE_REQUIRED],
+                        reason=self.connector.injection.failure_reason,
+                    )
+                    req.status = "refused"
+                    req.error = outcome.reason
+                    self.events.emit(
+                        "offload_request_finished_pending_jobs",
+                        request_id=req.request_id,
+                        job_id=job.job_id,
+                    )
+                    self.events.emit(
+                        "request_finished", request_id=req.request_id, status="FINISHED_ERROR"
+                    )
+                    return req
+                # unclaimed generic failure: NOT a claim outcome (fail closed);
+                # the request errors without claim-scoped scheduler events.
+                req.status = "error"
+                req.error = "unclaimed_load_failure"
+                self.events.emit(
+                    "offload_request_finished_pending_jobs",
+                    request_id=req.request_id,
+                    job_id=job.job_id,
+                )
+                self.events.emit(
+                    "request_finished", request_id=req.request_id, status="FINISHED_ERROR"
+                )
+                return req
+            for claim in restore_claims:
+                self.registry.mark(
+                    claim,
+                    ClaimState.RESTORED,
+                    "resident_claim_restored",
+                    request_id=req.request_id,
+                )
+            req.restored_tokens = sum(len(b.tokens) for b in host_blocks)
+            self.connector.complete_job(job)
+            dev_blocks = self.pool.lookup_prefix(req.tokens, self.block_size)
+
+        # --- prefill (reused blocks are NOT recomputed) ---
+        cached = sum(len(b.tokens) for b in dev_blocks)
+        req.cached_tokens = cached
+        for b in dev_blocks:
+            b.ref += 1
+        try:
+            if cached == 0:
+                logits, cache = self._jit_prefill(self.params, {"tokens": jnp.asarray([req.tokens], jnp.int32)})
+                logits = logits[0]
+            else:
+                cache, n = self._dense_cache(dev_blocks)
+                logits = None
+                for i, tok in enumerate(req.tokens[cached:]):
+                    lg, cache = self._jit_decode(
+                        self.params,
+                        cache,
+                        jnp.asarray([tok], jnp.int32),
+                        jnp.asarray([cached + i], jnp.int32),
+                    )
+                    logits = lg[0]
+                if logits is None:  # full prefix cached: replay last token
+                    lg, cache = self._jit_decode(
+                        self.params,
+                        cache,
+                        jnp.asarray([req.tokens[-1]], jnp.int32),
+                        jnp.asarray([len(req.tokens) - 1], jnp.int32),
+                    )
+                    logits = lg[0]
+            new_blocks = self._store_prefix_blocks(req, cache, len(req.tokens))
+            self._materialize_claims(req, len(req.tokens) - len(req.tokens) % self.block_size)
+
+            # --- greedy decode ---
+            pos = len(req.tokens)
+            for _ in range(req.max_new_tokens):
+                tok = int(jnp.argmax(logits))
+                req.output_tokens.append(tok)
+                lg, cache = self._jit_decode(
+                    self.params, cache, jnp.asarray([tok], jnp.int32), jnp.asarray([pos], jnp.int32)
+                )
+                logits = lg[0]
+                pos += 1
+        finally:
+            for b in dev_blocks:
+                b.ref -= 1
+
+        req.status = "finished"
+        self.events.emit(
+            "offload_request_finished_no_pending_jobs", request_id=req.request_id
+        )
+        self.events.emit("request_finished", request_id=req.request_id, status="FINISHED_OK")
+        return req

@@ -1,0 +1,215 @@
+"""Paged KV cache substrate: block pool, prefix index, claim-aware eviction.
+
+Blocks are the unit of storage, transfer, eviction and claim footprint.
+Each block carries a REAL tensor payload (k/v slabs for every layer) — the
+engine's decode consumes these bytes, so offload/restore is actual data
+movement, not counters (the paper rejects "generic transfer counters" as
+evidence; here a failed restore really does leave the KV absent).
+
+On the TPU target the device pool is HBM and the host pool is CPU DRAM
+behind DMA; in this CPU container they are two distinct buffer spaces with
+an injectable transfer layer (see serving/offload.py).
+"""
+from __future__ import annotations
+
+import hashlib
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+
+def chain_hash(prev: str, tokens: Sequence[int]) -> str:
+    h = hashlib.sha256()
+    h.update(prev.encode())
+    h.update(np.asarray(tokens, np.int32).tobytes())
+    return h.hexdigest()[:16]
+
+
+def prefix_object_id(tokens: Sequence[int], block_size: int) -> str:
+    """Stable reusable-object id for a full token prefix (block-aligned)."""
+    h = ""
+    for i in range(0, len(tokens) - len(tokens) % block_size, block_size):
+        h = chain_hash(h, tokens[i : i + block_size])
+    return h or chain_hash("", tokens)
+
+
+@dataclass
+class KVBlock:
+    block_id: int
+    tokens: Tuple[int, ...]
+    chain: str  # hash of the prefix up to and including this block
+    k: np.ndarray  # [L, block_size, KV, Dh]
+    v: np.ndarray
+    positions: np.ndarray  # [block_size] absolute positions
+    location: str = "device"  # "device" | "host"
+    ref: int = 0
+    priority: int = 0
+    claim_ids: Set[str] = field(default_factory=set)
+    last_use: float = 0.0
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.k.nbytes + self.v.nbytes)
+
+
+class PoolExhausted(RuntimeError):
+    def __init__(self, msg: str, blocking_claim_ids: List[str]):
+        super().__init__(msg)
+        self.blocking_claim_ids = blocking_claim_ids
+
+
+class BlockPool:
+    """Device-side block pool with claim-aware victim selection.
+
+    Eviction order: unreferenced blocks sorted by (priority asc, LRU).
+    Blocks belonging to *protected* claims are excluded from the victim set
+    (victim_exclusion_before_violation); if demand still cannot be met the
+    allocator raises ``PoolExhausted`` carrying the blocking claim ids so the
+    scheduler can take its explicit conflict action.
+    """
+
+    def __init__(self, capacity_blocks: int, event_log, clock=time.monotonic):
+        self.capacity = capacity_blocks
+        self._events = event_log
+        self._clock = clock
+        self.blocks: Dict[int, KVBlock] = {}
+        self._next_id = 0
+        # chain hash -> block_id for device-resident reusable blocks
+        self.prefix_index: Dict[str, int] = {}
+
+    # -- capacity -------------------------------------------------------------
+    @property
+    def used(self) -> int:
+        return len(self.blocks)
+
+    @property
+    def free_slots(self) -> int:
+        return self.capacity - self.used
+
+    # -- insert ---------------------------------------------------------------
+    def add_block(
+        self,
+        tokens: Tuple[int, ...],
+        chain: str,
+        k: np.ndarray,
+        v: np.ndarray,
+        positions: np.ndarray,
+        *,
+        priority: int = 0,
+        claim_ids: Optional[Set[str]] = None,
+        protected_claims: Optional[Set[str]] = None,
+        evictable_cb=None,
+    ) -> KVBlock:
+        if self.free_slots <= 0:
+            self.evict(1, protected_claims=protected_claims or set(), evictable_cb=evictable_cb)
+        blk = KVBlock(
+            block_id=self._next_id,
+            tokens=tuple(int(t) for t in tokens),
+            chain=chain,
+            k=np.asarray(k),
+            v=np.asarray(v),
+            positions=np.asarray(positions),
+            priority=priority,
+            claim_ids=set(claim_ids or ()),
+            last_use=self._clock(),
+        )
+        self._next_id += 1
+        self.blocks[blk.block_id] = blk
+        self.prefix_index[chain] = blk.block_id
+        self._events.emit("block_stored", block_id=blk.block_id, chain=chain, n_tokens=len(tokens))
+        return blk
+
+    def remove(self, block_id: int, reason: str = "evicted") -> KVBlock:
+        blk = self.blocks.pop(block_id)
+        if self.prefix_index.get(blk.chain) == block_id:
+            del self.prefix_index[blk.chain]
+        self._events.emit("block_removed", block_id=block_id, chain=blk.chain, reason=reason)
+        return blk
+
+    # -- lookup ---------------------------------------------------------------
+    def lookup_prefix(self, tokens: Sequence[int], block_size: int) -> List[KVBlock]:
+        """Longest chain of resident blocks matching the leading prefix."""
+        out: List[KVBlock] = []
+        h = ""
+        for i in range(0, len(tokens) - len(tokens) % block_size, block_size):
+            h = chain_hash(h, tokens[i : i + block_size])
+            bid = self.prefix_index.get(h)
+            if bid is None:
+                break
+            blk = self.blocks[bid]
+            blk.last_use = self._clock()
+            out.append(blk)
+        return out
+
+    # -- eviction ---------------------------------------------------------------
+    def victim_candidates(self, protected_claims: Set[str], evictable_cb=None) -> List[KVBlock]:
+        cands = []
+        for blk in self.blocks.values():
+            if blk.ref > 0:
+                continue
+            protecting = blk.claim_ids & protected_claims
+            if protecting:
+                self._events.emit(
+                    "allocator_victim_excluded",
+                    block_id=blk.block_id,
+                    claim_id=sorted(protecting)[0],
+                    protected_by=sorted(protecting),
+                )
+                continue
+            if evictable_cb is not None and not evictable_cb(blk):
+                continue
+            cands.append(blk)
+        cands.sort(key=lambda b: (b.priority, b.last_use))
+        return cands
+
+    def evict(self, n: int, *, protected_claims: Set[str], evictable_cb=None) -> List[KVBlock]:
+        victims = self.victim_candidates(protected_claims, evictable_cb)[:n]
+        if len(victims) < n:
+            blocking = sorted(
+                {c for blk in self.blocks.values() if blk.ref == 0 for c in blk.claim_ids & protected_claims}
+            )
+            raise PoolExhausted(
+                f"need {n} blocks, only {len(victims)} evictable", blocking_claim_ids=blocking
+            )
+        out = []
+        for blk in victims:
+            self._events.emit(
+                "pressure_eviction",
+                block_id=blk.block_id,
+                priority=blk.priority,
+                claim_id=sorted(blk.claim_ids)[0] if blk.claim_ids else None,
+            )
+            out.append(self.remove(blk.block_id, reason="pressure"))
+        return out
+
+
+class HostPool:
+    """Host-side (offload target) block store."""
+
+    def __init__(self) -> None:
+        self.blocks: Dict[int, KVBlock] = {}
+        self.by_chain: Dict[str, int] = {}
+
+    def put(self, blk: KVBlock) -> None:
+        blk.location = "host"
+        self.blocks[blk.block_id] = blk
+        self.by_chain[blk.chain] = blk.block_id
+
+    def pop(self, block_id: int) -> KVBlock:
+        blk = self.blocks.pop(block_id)
+        if self.by_chain.get(blk.chain) == block_id:
+            del self.by_chain[blk.chain]
+        return blk
+
+    def lookup_prefix(self, tokens: Sequence[int], block_size: int) -> List[KVBlock]:
+        out: List[KVBlock] = []
+        h = ""
+        for i in range(0, len(tokens) - len(tokens) % block_size, block_size):
+            h = chain_hash(h, tokens[i : i + block_size])
+            bid = self.by_chain.get(h)
+            if bid is None:
+                break
+            out.append(self.blocks[bid])
+        return out

@@ -1,0 +1,218 @@
+"""Offloading connector: store/load jobs, worker transfers, failure injection.
+
+Mirrors the shape of vLLM's OffloadingConnector (store/load job creation,
+worker transfer submission/completion, failed-load propagation) as described
+in the paper §7, implemented natively.  The connector moves REAL block
+payloads between the device pool and the host pool.
+
+Failure injection semantics follow the paper exactly:
+  - disabled unless the resident-claim load-failure flag is enabled;
+  - when enabled, the hook matches only host->device ("CPU -> GPU") loads;
+  - can filter by claim id;
+  - unclaimed generic failures require a separate flag.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set
+
+import numpy as np
+
+from repro.serving.kv_cache import BlockPool, HostPool, KVBlock
+
+
+@dataclass
+class FailureInjectionConfig:
+    resident_claim_load_failure: bool = False  # master flag (claim-scoped)
+    fail_claim_id: Optional[str] = None  # filter: only this claim fails
+    unclaimed_generic_failure: bool = False  # separate flag for unclaimed loads
+    failure_reason: str = "F0:injected_cpu_to_gpu_load_failure"
+
+    def should_fail(self, direction: str, claim_ids: Set[str]) -> bool:
+        if direction != "host_to_device":
+            return False
+        if claim_ids:
+            if not self.resident_claim_load_failure:
+                return False
+            if self.fail_claim_id is not None:
+                return self.fail_claim_id in claim_ids
+            return True
+        return self.unclaimed_generic_failure
+
+
+@dataclass
+class TransferResult:
+    ok: bool
+    reason: str = ""
+
+
+@dataclass
+class OffloadJob:
+    job_id: int
+    kind: str  # "store" | "load"
+    block_ids: List[int]
+    claim_id: Optional[str]
+    request_id: Optional[str]
+    done: bool = False
+    ok: bool = True
+
+
+class OffloadingConnector:
+    """Device<->host block mover with ordered lifecycle events."""
+
+    def __init__(
+        self,
+        device_pool: BlockPool,
+        host_pool: HostPool,
+        event_log,
+        injection: Optional[FailureInjectionConfig] = None,
+    ):
+        self.device = device_pool
+        self.host = host_pool
+        self._events = event_log
+        self.injection = injection or FailureInjectionConfig()
+        self._job_ids = itertools.count()
+        self.jobs: Dict[int, OffloadJob] = {}
+
+    # -- lookup ------------------------------------------------------------------
+    def lookup(
+        self,
+        tokens: Sequence[int],
+        block_size: int,
+        request_id: str,
+        *,
+        skip_blocks: int = 0,
+        start_chain: str = "",
+    ) -> List[KVBlock]:
+        """Host-side prefix lookup; emits offload_lookup_result (E1).
+
+        ``skip_blocks``/``start_chain`` let the walk continue past a
+        device-resident leading prefix.
+        """
+        from repro.serving.kv_cache import chain_hash
+
+        hit: List[KVBlock] = []
+        h = start_chain
+        nb = len(tokens) // block_size
+        for i in range(skip_blocks, nb):
+            h = chain_hash(h, tokens[i * block_size : (i + 1) * block_size])
+            bid = self.host.by_chain.get(h)
+            if bid is None:
+                break
+            hit.append(self.host.blocks[bid])
+        self._events.emit(
+            "offload_lookup_result",
+            request_id=request_id,
+            hit_tokens=sum(len(b.tokens) for b in hit) + skip_blocks * block_size,
+            hit_blocks=len(hit),
+        )
+        return hit
+
+    # -- store (device -> host): offload ---------------------------------------
+    def store(
+        self, blocks: List[KVBlock], *, claim_id: Optional[str], request_id: Optional[str]
+    ) -> OffloadJob:
+        job = OffloadJob(next(self._job_ids), "store", [b.block_id for b in blocks], claim_id, request_id)
+        self.jobs[job.job_id] = job
+        self._events.emit(
+            "offload_store_job_created",
+            request_id=request_id,
+            claim_id=claim_id,
+            job_id=job.job_id,
+            block_ids=job.block_ids,
+        )
+        for blk in blocks:
+            res = self._worker_transfer(blk, "device_to_host", claim_id, request_id)
+            if not res.ok:  # store failures are not injected in this artifact
+                job.ok = False
+                continue
+            self.device.remove(blk.block_id, reason="offloaded")
+            self.host.put(blk)
+        job.done = True
+        return job
+
+    def complete_job(self, job: OffloadJob) -> None:
+        """Emit the job-completion boundary (E9) — ordered AFTER the engine's
+        claim-scoped lifecycle event (E5/E8), matching witness paths A/B."""
+        self._events.emit(
+            "offload_job_completed",
+            request_id=job.request_id,
+            claim_id=job.claim_id,
+            job_id=job.job_id,
+            ok=job.ok,
+        )
+
+    # -- load (host -> device): restore ------------------------------------------
+    def load(
+        self,
+        blocks: List[KVBlock],
+        *,
+        claim_id: Optional[str],
+        request_id: Optional[str],
+        protected_claims: Optional[Set[str]] = None,
+    ) -> OffloadJob:
+        job = OffloadJob(next(self._job_ids), "load", [b.block_id for b in blocks], claim_id, request_id)
+        self.jobs[job.job_id] = job
+        self._events.emit(
+            "offload_load_job_created",
+            request_id=request_id,
+            claim_id=claim_id,
+            job_id=job.job_id,
+            block_ids=job.block_ids,
+        )
+        for blk in blocks:
+            res = self._worker_transfer(blk, "host_to_device", claim_id, request_id)
+            if not res.ok:
+                job.ok = False
+                self._events.emit(
+                    "offload_worker_load_failed",
+                    request_id=request_id,
+                    claim_id=claim_id,
+                    block_id=blk.block_id,
+                    reason=res.reason,
+                )
+                # failed bytes never reach the device pool — the KV is absent
+                continue
+            moved = self.host.pop(blk.block_id)
+            moved.location = "device"
+            if self.device.free_slots <= 0:
+                self.device.evict(1, protected_claims=protected_claims or set())
+            self.device.blocks[moved.block_id] = moved
+            self.device.prefix_index[moved.chain] = moved.block_id
+            self._events.emit(
+                "block_stored", block_id=moved.block_id, chain=moved.chain, n_tokens=len(moved.tokens)
+            )
+        job.done = True
+        return job
+
+    # -- worker ---------------------------------------------------------------------
+    def _worker_transfer(
+        self, blk: KVBlock, direction: str, claim_id: Optional[str], request_id: Optional[str]
+    ) -> TransferResult:
+        self._events.emit(
+            "offload_worker_transfer_submitted",
+            request_id=request_id,
+            claim_id=claim_id,
+            block_id=blk.block_id,
+            direction=direction,
+            nbytes=blk.nbytes,
+        )
+        claim_ids = set(blk.claim_ids) | ({claim_id} if claim_id else set())
+        if self.injection.should_fail(direction, claim_ids):
+            res = TransferResult(False, self.injection.failure_reason)
+        else:
+            # the actual byte movement: payloads are copied between pools
+            blk.k = np.array(blk.k, copy=True)
+            blk.v = np.array(blk.v, copy=True)
+            res = TransferResult(True)
+        self._events.emit(
+            "offload_worker_transfer_finished",
+            request_id=request_id,
+            claim_id=claim_id,
+            block_id=blk.block_id,
+            direction=direction,
+            ok=res.ok,
+            reason=res.reason,
+        )
+        return res

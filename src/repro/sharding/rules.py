@@ -1,0 +1,198 @@
+"""Per-architecture sharding rules (DP / FSDP / TP / EP / SP).
+
+Baseline layout (EXPERIMENTS.md §Perf tracks deviations per hillclimb):
+  - batch over the data axes ("pod" x "data" in the multi-pod mesh);
+  - parameter matrices FSDP-sharded over 'data' on one dim and TP-sharded
+    over 'model' on the other (GSPMD inserts the per-layer all-gathers);
+  - MoE experts: EP over 'model' when E % model == 0 (arctic), else TP over
+    d_ff (grok) — matching models/moe.py's shard_map specs;
+  - train/prefill activations sequence-sharded over 'model' between layers
+    (Megatron-style SP — divides the remat stash by the model-axis size);
+  - decode KV caches: batch over data axes, *sequence* over 'model'
+    (flash-decode style: every chip scores its cache slice, softmax
+    reductions become cheap all-reduces; avoids GQA head-padding waste).
+Dims that cannot shard meaningfully (size < axis) fall back to replication
+rather than padding (fail-soft, visible in the roofline ratio).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    dp_axes: Tuple[str, ...] = ("data",)  # ("pod", "data") for multi-pod
+    tp_axis: str = "model"
+    # parameter FSDP axis (within one pod); None = TP-only params, replicated
+    # over data — the serving layout for models whose per-model-rank weights
+    # fit HBM (re-gathering FSDP shards EVERY decode step was the dominant
+    # decode collective: EXPERIMENTS.md §Perf cell 3).
+    fsdp_axis: Optional[str] = "data"
+
+    @staticmethod
+    def for_mesh(mesh: Mesh, *, serving: bool = False, param_bytes: float = 0.0) -> "ShardingRules":
+        dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+        fsdp: Optional[str] = "data"
+        if serving:
+            per_rank = param_bytes / mesh.shape["model"]
+            if per_rank < 4e9:  # replicating over data costs < 4 GB/chip
+                fsdp = None
+        return ShardingRules(dp_axes=dp, fsdp_axis=fsdp)
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _maybe(mesh: Mesh, axis, dim: int):
+    """Use the axis only when the dim divides exactly (argument shardings
+    must be constructible — no GSPMD padding on pjit inputs)."""
+    return axis if dim % _axis_size(mesh, axis) == 0 else None
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+_REPLICATED_NAMES = {
+    "w", "b", "fb", "hnorm", "q_norm", "k_norm", "dt_bias", "D", "ri", "rf",
+    "rz", "ro", "conv_w", "router",
+}
+
+
+def _param_rule(cfg, names: Tuple[str, ...], shape: Tuple[int, ...], mesh: Mesh, rules: ShardingRules):
+    """PartitionSpec for the *trailing* (per-layer) dims of one weight."""
+    name = names[-1]
+    fsdp, tp = rules.fsdp_axis, rules.tp_axis
+    d2 = shape[-2] if len(shape) >= 2 else 0
+    d1 = shape[-1]
+
+    if name in _REPLICATED_NAMES or len(shape) < 2:
+        return ()
+
+    in_moe = any(n == "moe" for n in names)
+    if in_moe:
+        # experts stacked [E, d, ff] / [E, ff, d]
+        E = shape[-3]
+        ep = E % _axis_size(mesh, tp) == 0
+        if name in ("w_gate", "w_up"):
+            if ep:
+                return (tp, _maybe(mesh, fsdp, d2), None)
+            return (None, _maybe(mesh, fsdp, d2), _maybe(mesh, tp, d1))
+        if name == "w_down":
+            if ep:
+                return (tp, None, _maybe(mesh, fsdp, d1))
+            return (None, _maybe(mesh, tp, d2), _maybe(mesh, fsdp, d1))
+
+    if name == "embed":  # [V, d] — gathers pull a d-slice per chip
+        return (None, _maybe(mesh, tp, d1))
+    if name == "lm_head":  # [d, V] — vocab-sharded logits for the chunked loss
+        return (None, _maybe(mesh, tp, d1))
+    if name in ("wq", "wk", "wv", "wg", "w_gate", "w_up", "w_in", "wi", "wf", "wz"):
+        return (_maybe(mesh, fsdp, d2), _maybe(mesh, tp, d1))
+    if name in ("wo", "w_down", "w_out", "wproj", "w_dt"):
+        return (_maybe(mesh, tp, d2), _maybe(mesh, fsdp, d1))
+    if name in ("w_xproj", "A_log"):
+        return (_maybe(mesh, tp, d2), None)
+    return tuple(None for _ in shape)
+
+
+def param_pspecs(cfg, param_shapes, mesh: Mesh, rules: Optional[ShardingRules] = None):
+    """PartitionSpec pytree matching a params ShapeDtypeStruct pytree."""
+    rules = rules or ShardingRules.for_mesh(mesh)
+
+    def rule(path, leaf):
+        names = tuple(
+            getattr(p, "key", getattr(p, "name", str(p))) for p in path
+        )
+        trailing = _param_rule(cfg, names, leaf.shape, mesh, rules)
+        pad = len(leaf.shape) - len(trailing)
+        return P(*([None] * pad + list(trailing)))
+
+    return jax.tree_util.tree_map_with_path(rule, param_shapes)
+
+
+# ---------------------------------------------------------------------------
+# batches and caches
+# ---------------------------------------------------------------------------
+
+
+def batch_pspecs(cfg, batch_shapes, mesh: Mesh, rules: Optional[ShardingRules] = None):
+    rules = rules or ShardingRules.for_mesh(mesh)
+    dp = rules.dp_axes
+
+    def rule(path, leaf):
+        b = leaf.shape[0]
+        lead = dp if b % _axis_size(mesh, dp) == 0 else None
+        return P(*([lead] + [None] * (len(leaf.shape) - 1)))
+
+    return jax.tree_util.tree_map_with_path(rule, batch_shapes)
+
+
+def cache_pspecs(cfg, cache_shapes, mesh: Mesh, rules: Optional[ShardingRules] = None):
+    """Decode-cache shardings: batch over dp, sequence over 'model'."""
+    rules = rules or ShardingRules.for_mesh(mesh)
+    dp, tp = rules.dp_axes, rules.tp_axis
+    dp_n = _axis_size(mesh, dp)
+    tp_n = _axis_size(mesh, tp)
+
+    def rule(path, leaf):
+        names = tuple(getattr(p, "key", getattr(p, "name", str(p))) for p in path)
+        name = names[-1] if names else ""
+        shape = leaf.shape
+        if name in ("k", "v", "xk", "xv") and len(shape) == 5:
+            # [L, B, S, KV, Dh]
+            _, B, S, KV, Dh = shape
+            return P(
+                None,
+                dp if B % dp_n == 0 else None,
+                tp if S % tp_n == 0 else None,
+                None,
+                None,
+            )
+        if name == "pos" and len(shape) == 2:
+            B, S = shape
+            return P(dp if B % dp_n == 0 else None, tp if S % tp_n == 0 else None)
+        if name in ("k_scale", "v_scale") and len(shape) == 4:  # [L, B, S, KV]
+            _, B, S, _ = shape
+            return P(
+                None,
+                dp if B % dp_n == 0 else None,
+                tp if S % tp_n == 0 else None,
+                None,
+            )
+        if cfg.family == "ssm":  # xlstm grouped states [G, n_blocks, B, ...]
+            if len(shape) >= 3:
+                B = shape[2]
+                rest = [None] * (len(shape) - 3)
+                if name == "C" and len(shape) == 6:  # [..., nh, dk, dv]
+                    rest = [None, None, tp if shape[-1] % tp_n == 0 else None]
+                return P(None, None, dp if B % dp_n == 0 else None, *rest)
+            return P(*([None] * len(shape)))
+        if cfg.family == "hybrid":
+            if name == "h" and len(shape) == 4:  # ssm state [L, B, di, N]
+                _, B, di, _ = shape
+                return P(None, dp if B % dp_n == 0 else None, tp if di % tp_n == 0 else None, None)
+            if name == "conv" and len(shape) == 4:  # [L, B, K-1, di]
+                _, B, _, di = shape
+                return P(None, dp if B % dp_n == 0 else None, None, tp if di % tp_n == 0 else None)
+        # generic: batch on dim 0
+        lead = dp if shape and shape[0] % dp_n == 0 else None
+        return P(*([lead] + [None] * (len(shape) - 1)))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shapes)
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

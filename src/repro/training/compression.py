@@ -1,0 +1,81 @@
+"""Gradient compression for cross-pod synchronization.
+
+Blockwise-int8 quantization with error feedback: the cross-pod gradient
+all-reduce is the slowest link in the (2, 16, 16) production mesh (DCN, not
+ICI), so halving/quartering its bytes moves the collective roofline term
+directly.  ``compressed_psum`` is designed for use inside ``shard_map`` over
+the 'pod' axis; error feedback (residual carried between steps) keeps the
+quantization bias from accumulating — a standard convergence safeguard.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+CBLOCK = 256
+
+
+def quantize(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (any shape) -> (int8 values same shape, fp32 scales per block)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.shape[0]) % CBLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, CBLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
+    q = jnp.round(blocks / jnp.maximum(scale, 1e-12)).astype(jnp.int8)
+    return q, scale[:, 0]
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray, shape) -> jnp.ndarray:
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape)
+
+
+def compress_roundtrip(x: jnp.ndarray) -> jnp.ndarray:
+    q, s = quantize(x)
+    return dequantize(q, s, x.shape)
+
+
+def compressed_psum(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """int8 all-gather + local dequant-sum == psum at ~0.25x the bf16 bytes.
+
+    Per-shard scales make a direct int8 psum ill-defined; gathering the
+    (int8 values, fp32 scales) pair and summing dequantized locally is the
+    standard formulation.  Use inside shard_map over ``axis_name``.
+    """
+    q, s = quantize(x)
+    qg = jax.lax.all_gather(q, axis_name)  # [n_pods, blocks, CBLOCK] int8
+    sg = jax.lax.all_gather(s, axis_name)  # [n_pods, blocks]
+    total = jnp.sum(qg.astype(jnp.float32) * sg[..., None], axis=0)
+    flat = total.reshape(-1)
+    n = 1
+    for d in x.shape:
+        n *= d
+    return flat[:n].reshape(x.shape).astype(x.dtype)
+
+
+class ErrorFeedback:
+    """Carry the quantization residual into the next step's gradient."""
+
+    @staticmethod
+    def init(grads):
+        return jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+    @staticmethod
+    def apply(grads, residual):
+        """Returns (compressed-corrected grads, new residual)."""
+
+        def one(g, r):
+            corrected = g.astype(jnp.float32) + r
+            sent = compress_roundtrip(corrected)
+            return sent.astype(g.dtype), corrected - sent
+
+        flat = jax.tree.map(one, grads, residual)
+        new_g = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_r = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+        return new_g, new_r

@@ -1,0 +1,174 @@
+"""Tests for the fail-closed lowering checker, matrix, bad-lowering suite and
+mutation controls (paper §4, §8.1, §8.2, §9)."""
+import copy
+
+import pytest
+
+from repro.core import bad_lowering, mutations
+from repro.core.checker import generate_matrix
+from repro.core.descriptors import (
+    Anchor,
+    Descriptor,
+    DescriptorRow,
+    EvidenceItem,
+    load_all_descriptors,
+)
+from repro.core.lowering import (
+    LABEL_ADAPTER,
+    LABEL_APPROX,
+    LABEL_NATIVE,
+    LABEL_REJECTED,
+    LABEL_UNKNOWN,
+    judge_row,
+    load_modes,
+)
+
+
+@pytest.fixture(scope="module")
+def descriptors():
+    return load_all_descriptors()
+
+
+@pytest.fixture(scope="module")
+def matrix(descriptors):
+    return generate_matrix(descriptors)
+
+
+def _rows(matrix, backend):
+    return {(r.mode, r.adapter_depth): r for r in matrix if r.backend == backend}
+
+
+def test_paper_matrix_tensorrt_rc14(matrix):
+    """The paper's TensorRT rc14 labels, including the two adapter positives
+    and the rejected hard_protected rows."""
+    rows = _rows(matrix, "tensorrt-llm-1.3.0rc14-container")
+    assert len(rows) == 14, "all 14 TensorRT rc14 rows must be present"
+    assert rows[("best_effort", "telemetry_join")].label == LABEL_ADAPTER
+    assert rows[("soft_priority", "telemetry_join")].label == LABEL_ADAPTER
+    assert rows[("hard_protected", "none")].label == LABEL_REJECTED
+    assert rows[("hard_protected", "telemetry_join")].label == LABEL_REJECTED
+    assert rows[("expiring", "none")].label == LABEL_APPROX
+    assert rows[("offloadable", "none")].label == LABEL_APPROX
+    assert rows[("offloadable", "telemetry_join")].label == LABEL_APPROX
+    assert rows[("routed_reuse", "none")].label == LABEL_UNKNOWN
+
+
+def test_paper_matrix_no_public_native_sound(matrix):
+    """Paper §8.1: no public runtime descriptor produces native_sound."""
+    for r in matrix:
+        if r.backend != "repro-jax-native":
+            assert r.label != LABEL_NATIVE, f"{r.backend} {r.mode} must not be native"
+
+
+def test_beyond_paper_native_runtime(matrix):
+    """Our runtime achieves native_sound for all 7 modes from generated,
+    anchored conformance traces — the beyond-paper result."""
+    rows = _rows(matrix, "repro-jax-native")
+    assert len(rows) == 7
+    for (mode, depth), r in rows.items():
+        assert r.label == LABEL_NATIVE, f"{mode}: {r.label} ({r.reasons})"
+        assert all(d == "native" for d in r.satisfied.values())
+
+
+def test_paper_matrix_vllm_patched(matrix):
+    rows = _rows(matrix, "vllm-patched-connector")
+    for mode in ("best_effort", "demotable", "expiring", "hard_protected", "offloadable"):
+        assert rows[(mode, "backend_patch")].label == LABEL_ADAPTER, mode
+    assert rows[("soft_priority", "backend_patch")].label == LABEL_UNKNOWN
+    assert rows[("routed_reuse", "backend_patch")].label == LABEL_UNKNOWN
+
+
+def test_paper_matrix_sglang_dynamo(matrix):
+    sg = _rows(matrix, "sglang-hicache-bbe9c7e")
+    assert sg[("best_effort", "telemetry_join")].label == LABEL_ADAPTER
+    assert sg[("offloadable", "none")].label == LABEL_APPROX
+    assert sg[("offloadable", "storage_restorability")].label == LABEL_APPROX
+    dy = _rows(matrix, "dynamo-kv-routing")
+    assert dy[("routed_reuse", "none")].label == LABEL_APPROX
+    assert dy[("routed_reuse", "routing_hook")].label == LABEL_APPROX, (
+        "docs-only evidence cannot become an adapter positive (rule 4)"
+    )
+
+
+def test_bad_lowering_all_fail_closed():
+    rows = bad_lowering.check_all()
+    assert len(rows) == 10
+    for r in rows:
+        assert r["fail_closed"], r
+
+
+def test_mutation_controls_16_of_16():
+    results = mutations.run_all()
+    assert len(results) == 16
+    for r in results:
+        assert r.baseline_positive, f"{r.name}: baseline must be positive"
+        assert r.fail_closed, f"{r.name}: mutation did not fail closed"
+
+
+# ---------------------------------------------------------------------------
+# judgment unit tests
+# ---------------------------------------------------------------------------
+
+
+def _positive_row(mode="best_effort"):
+    mk = lambda o: EvidenceItem(
+        o,
+        support="supported",
+        depth="native",
+        source_class="conformance_trace",
+        order_preserved=True,
+        claim_scoped=True,
+        anchor=Anchor("result", "results/x.json", "gate passed"),
+    )
+    obls = load_modes()["modes"][mode]["obligations"]
+    return DescriptorRow(mode=mode, evidence=[mk(o) for o in obls])
+
+
+def test_native_sound_requires_all_native():
+    desc = Descriptor(backend="t")
+    row = _positive_row()
+    assert judge_row(desc, row).label == LABEL_NATIVE
+    row.evidence[0].depth = "telemetry_join"
+    row.preconditions = {k: True for k in load_modes()["telemetry_join_preconditions"]}
+    assert judge_row(desc, row).label == LABEL_ADAPTER
+
+
+def test_unknown_when_no_signals():
+    desc = Descriptor(backend="t")
+    row = DescriptorRow(mode="expiring")
+    assert judge_row(desc, row).label == LABEL_UNKNOWN
+
+
+def test_alias_active_refusal_or_defer():
+    """Backward-compatible obligation alias maps onto explicit_conflict_action."""
+    from repro.core.obligations import canonical
+
+    assert canonical("active_refusal_or_defer") == "explicit_conflict_action"
+
+
+def test_forbidden_lowering_always_rejected_even_with_signals():
+    desc = Descriptor(backend="t")
+    row = DescriptorRow(
+        mode="hard_protected",
+        asserts="conformance",
+        claimed_mapping="active_no_evict",
+        approximation_signals=["lots", "of", "signals"],
+    )
+    assert judge_row(desc, row).label == LABEL_REJECTED
+
+
+def test_invalid_mode_is_invalid_lowering_claim():
+    desc = Descriptor(backend="t")
+    row = DescriptorRow(mode="not_a_mode")
+    j = judge_row(desc, row)
+    assert j.label == LABEL_REJECTED
+    assert any("invalid lowering claim" in r for r in j.reasons)
+
+
+def test_independent_descriptor_audit_14_of_14():
+    """Paper §8.1: a second, independently implemented judgment re-derives
+    all 14 TensorRT rc14 rows and agrees with the primary checker."""
+    from repro.core.independent_audit import run_audit
+
+    res = run_audit()
+    assert res["agreement"] == "14/14", res["rows"]

@@ -1,0 +1,38 @@
+"""int8 KV cache: decode logits must closely track the bf16-cache path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.models.registry import build_model
+
+
+def test_int8_kv_decode_matches_bf16():
+    base = reduced(get_config("qwen3-1.7b"))
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(0, base.vocab_size, (2, 12)), jnp.int32)
+
+    outs = {}
+    for dtype in ("bf16", "int8"):
+        cfg = base.replace(kv_cache_dtype=dtype)
+        bundle = build_model(cfg)
+        params = bundle.init_params(jax.random.PRNGKey(0))
+        logits, cache = bundle.prefill_fn(params, {"tokens": tokens}, 32)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        pos = jnp.full((2,), 12, jnp.int32)
+        l2, cache = bundle.decode_fn(params, cache, tok, pos)
+        l3, _ = bundle.decode_fn(params, cache, jnp.argmax(l2, -1).astype(jnp.int32), pos + 1)
+        outs[dtype] = (np.asarray(l2, np.float32), np.asarray(l3, np.float32))
+
+    for a, b in zip(outs["bf16"], outs["int8"]):
+        # greedy argmax must agree; logits within quantization tolerance
+        assert (a.argmax(-1) == b.argmax(-1)).all()
+        np.testing.assert_allclose(a, b, atol=0.35, rtol=0.1)
+
+
+def test_int8_cache_capacity_halved():
+    cfg = reduced(get_config("qwen3-1.7b")).replace(kv_cache_dtype="int8")
+    bundle = build_model(cfg)
+    cache = bundle.make_cache(1, 64)
+    assert cache["k"].dtype == jnp.int8
+    assert "k_scale" in cache

@@ -1,0 +1,81 @@
+"""ResidentClaims over recurrent-state snapshots (xLSTM / hymba): witness
+paths A and B bind to state-snapshot objects exactly as to KV blocks
+(DESIGN.md §4 arch-applicability)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.analyzer import (
+    check_failure_outcome_path,
+    check_observation_path,
+    validate_event_sequence,
+)
+from repro.core.claims import ClaimMode, ClaimState
+from repro.models.registry import build_model
+from repro.serving.snapshot_engine import SnapshotEngine
+
+PREFIX = tuple(range(10, 22))
+
+
+@pytest.fixture(scope="module", params=["xlstm-350m", "hymba-1.5b"])
+def snap_bundle(request):
+    cfg = reduced(get_config(request.param))
+    bundle = build_model(cfg)
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    return bundle, params
+
+
+def test_snapshot_path_a_observation(snap_bundle):
+    bundle, params = snap_bundle
+    eng = SnapshotEngine(bundle, params)
+    claim = eng.accept_claim(PREFIX, ClaimMode.OFFLOADABLE)
+    assert claim.predicate.kind == "state_at_token"
+    eng.materialize_claim(claim.claim_id)
+    assert claim.state == ClaimState.MATERIALIZED
+    eng.offload_claim(claim.claim_id)
+    assert claim.state == ClaimState.OFFLOADED
+
+    req = eng.serve(PREFIX + (30, 31), max_new_tokens=2)
+    assert req.status == "finished"
+    assert req.restored_tokens == len(PREFIX)
+    assert claim.state == ClaimState.RESTORED
+    assert validate_event_sequence(eng.events).passed
+    v = check_observation_path(eng.events, claim.claim_id, req.request_id)
+    assert v.passed, v.reasons
+
+
+def test_snapshot_restore_preserves_decode(snap_bundle):
+    """Restored state is bit-identical: greedy decode matches a cold run."""
+    bundle, params = snap_bundle
+    prompt = PREFIX + (30, 31)
+
+    cold = SnapshotEngine(bundle, params).serve(prompt, max_new_tokens=3)
+
+    eng = SnapshotEngine(bundle, params)
+    claim = eng.accept_claim(PREFIX, ClaimMode.OFFLOADABLE)
+    eng.materialize_claim(claim.claim_id)
+    eng.offload_claim(claim.claim_id)
+    warm = eng.serve(prompt, max_new_tokens=3)
+    assert warm.restored_tokens == len(PREFIX)
+    assert warm.output_tokens == cold.output_tokens
+
+
+def test_snapshot_path_b_fail_closed(snap_bundle):
+    bundle, params = snap_bundle
+    eng = SnapshotEngine(bundle, params)
+    claim = eng.accept_claim(PREFIX, ClaimMode.OFFLOADABLE)
+    eng.materialize_claim(claim.claim_id)
+    eng.offload_claim(claim.claim_id)
+    eng.connector.injection.resident_claim_load_failure = True
+    eng.connector.injection.fail_claim_id = claim.claim_id
+
+    req = eng.serve(PREFIX + (40, 41), max_new_tokens=2)
+    assert req.status == "refused"
+    assert req.output_tokens == []  # fail-closed: no recompute fallback
+    assert claim.state == ClaimState.RESTORATION_FAILED
+    v = check_failure_outcome_path(eng.events, claim.claim_id, req.request_id)
+    assert v.passed, v.reasons
+    e13 = eng.events.named("scheduler_active_request_refused")[0]
+    assert e13.payload["blocking_claim_ids"] == [claim.claim_id]
