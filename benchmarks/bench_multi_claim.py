@@ -1,9 +1,22 @@
-"""Multi-claim attribution control (paper §7 path C, §8.3): 3/3 repetitions
-must attribute failure/refusal ONLY to the target claim while the non-target
-claim restores successfully."""
+"""Multi-claim attribution control (paper §7 path C, §8.3) + serving
+throughput (continuous batching vs sequential decode).
+
+Attribution gate: 3/3 repetitions must attribute failure/refusal ONLY to the
+target claim while the non-target claim restores successfully.
+
+Serving gate: the same workload decoded through ``run_batch`` (one jitted
+step per token position for the whole batch) must reach >= 2x the
+sequential-decode throughput — the perf criterion of the continuous-batching
+refactor.  Results land in ``results/BENCH_serving.json`` so successive PRs
+have a throughput/latency trajectory.
+
+  PYTHONPATH=src python benchmarks/bench_multi_claim.py [--fast]
+"""
 from __future__ import annotations
 
 import json
+import sys
+import time
 from pathlib import Path
 
 from repro.core.analyzer import check_multi_claim_attribution, validate_event_sequence
@@ -11,8 +24,8 @@ from repro.core.claims import ClaimMode, ClaimState
 from repro.core.native_descriptor import default_engine_factory
 
 
-def run(out_path: Path = Path("results/vllm-multi-claim-attribution-control.json")):
-    make_engine = default_engine_factory()
+def run(out_path: Path = Path("results/vllm-multi-claim-attribution-control.json"), make_engine=None):
+    make_engine = make_engine or default_engine_factory()
     reps = []
     for rep in range(3):
         eng = make_engine()
@@ -50,5 +63,77 @@ def run(out_path: Path = Path("results/vllm-multi-claim-attribution-control.json
     return summary
 
 
+def run_serving(
+    out_path: Path = Path("results/BENCH_serving.json"),
+    *,
+    batch: int = 8,
+    new_tokens: int = 16,
+    prompt_len: int = 12,
+    reps: int = 3,
+    make_engine=None,
+):
+    """Batched vs sequential decode throughput/latency on the same workload."""
+    make_engine = make_engine or default_engine_factory()
+    prompts = [tuple(range(1000 + 32 * i, 1000 + 32 * i + prompt_len)) for i in range(batch)]
+
+    eng = make_engine(device_blocks=max(256, 4 * batch * (prompt_len + new_tokens)))
+    # warmup: compile prefill, B=1 decode and B=batch decode once
+    eng.run_batch([eng.submit(p, max_new_tokens=2) for p in prompts])
+    eng.run(eng.submit(tuple(range(5000, 5000 + prompt_len)), max_new_tokens=2))
+
+    def _measure(fn):
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fn()
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    t_seq = _measure(
+        lambda: [eng.run(eng.submit(p, max_new_tokens=new_tokens)) for p in prompts]
+    )
+    t_bat = _measure(
+        lambda: eng.run_batch([eng.submit(p, max_new_tokens=new_tokens) for p in prompts])
+    )
+
+    total_tokens = batch * new_tokens
+    result = {
+        "workload": {
+            "model": eng.cfg.name,
+            "batch": batch,
+            "prompt_len": prompt_len,
+            "new_tokens": new_tokens,
+            "reps": reps,
+        },
+        "sequential": {
+            "wall_s": round(t_seq, 4),
+            "tok_per_s": round(total_tokens / t_seq, 1),
+            "ms_per_token": round(1e3 * t_seq / total_tokens, 3),
+        },
+        "batched": {
+            "wall_s": round(t_bat, 4),
+            "tok_per_s": round(total_tokens / t_bat, 1),
+            "ms_per_token": round(1e3 * t_bat / total_tokens, 3),
+        },
+        "speedup": round(t_seq / t_bat, 2),
+        "meets_2x_criterion": t_seq / t_bat >= 2.0,
+    }
+    out_path = Path(out_path)
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(result, indent=1))
+    return result
+
+
 if __name__ == "__main__":
-    print(json.dumps(run(), indent=1))
+    fast = "--fast" in sys.argv
+    make_engine = default_engine_factory()
+    print(json.dumps(run(make_engine=make_engine), indent=1))
+    serving = run_serving(
+        make_engine=make_engine,
+        batch=4 if fast else 8,
+        new_tokens=8 if fast else 16,
+        reps=1 if fast else 3,
+    )
+    print(json.dumps(serving, indent=1))
+    if not serving["meets_2x_criterion"]:
+        sys.exit(1)

@@ -28,15 +28,36 @@ class Verdict:
         return self.passed
 
 
+def _matches(e: Event, k: str, v) -> bool:
+    """Match an event field/payload value; callables act as predicates
+    (used e.g. to accept any ``*_to_device`` restore direction)."""
+    actual = getattr(e, k, None)
+    if actual is None:
+        actual = e.payload.get(k)
+    if callable(v):
+        return bool(v(actual))
+    return actual == v
+
+
 def _first(events: Sequence[Event], name: str, after: int = -1, **match) -> Optional[Event]:
     for e in events:
         if e.name != name or e.seq <= after:
             continue
-        if all(
-            (getattr(e, k, None) == v) or (e.payload.get(k) == v) for k, v in match.items()
-        ):
+        if all(_matches(e, k, v) for k, v in match.items()):
             return e
     return None
+
+
+def _restore_direction(source_tier: Optional[str] = None):
+    """Direction matcher for restores into the device pool.
+
+    ``None`` accepts a restore from ANY tier (host_to_device,
+    disk_to_device, ...); a tier name pins the boundary.
+    """
+    if source_tier is not None:
+        expected = f"{source_tier}_to_device"
+        return lambda d: d == expected
+    return lambda d: isinstance(d, str) and d.endswith("_to_device")
 
 
 def validate_event_sequence(log: EventLog) -> Verdict:
@@ -51,11 +72,19 @@ def validate_event_sequence(log: EventLog) -> Verdict:
     return Verdict(True, [f"{len(log)} events, total order valid"])
 
 
-def check_observation_path(log: EventLog, claim_id: str, reuse_request_id: str) -> Verdict:
+def check_observation_path(
+    log: EventLog,
+    claim_id: str,
+    reuse_request_id: str,
+    source_tier: Optional[str] = None,
+) -> Verdict:
     """Witness path A: successful offload/load observation.
 
     Required order: accept -> materialized -> store(E2, E3, E4 ok) -> E5 ->
     reuse E0 -> E1 hit -> E6 -> E7 -> E3 -> E4 ok -> E8 -> E9 -> E10.
+
+    ``source_tier`` pins the restore boundary (e.g. "disk"); by default any
+    tier's restore into the device pool satisfies the path.
     """
     ev = log.events
     reasons = []
@@ -94,10 +123,10 @@ def check_observation_path(log: EventLog, claim_id: str, reuse_request_id: str) 
         after=load.seq,
         claim_id=claim_id,
         ok=True,
-        direction="host_to_device",
+        direction=_restore_direction(source_tier),
     )
     if l_ok is None:
-        return Verdict.fail("no successful host->device transfer for the claim")
+        return Verdict.fail("no successful tier->device transfer for the claim")
     restored = _first(ev, "resident_claim_restored", after=l_ok.seq, claim_id=claim_id)
     if restored is None:
         return Verdict.fail("claim not restored before reuse completion")
@@ -115,11 +144,18 @@ def check_observation_path(log: EventLog, claim_id: str, reuse_request_id: str) 
     return Verdict(True, reasons)
 
 
-def check_failure_outcome_path(log: EventLog, claim_id: str, reuse_request_id: str) -> Verdict:
+def check_failure_outcome_path(
+    log: EventLog,
+    claim_id: str,
+    reuse_request_id: str,
+    source_tier: Optional[str] = None,
+) -> Verdict:
     """Witness path B: same-claim restoration failure -> fail-closed outcome.
 
     The decisive sequence (paper §7): accepted claim exists, same claim
-    offloaded, reuse hits and requires restore, matching CPU->GPU load fails,
+    offloaded, reuse hits and requires restore, the matching restore-into-
+    device load fails ("CPU -> GPU" in the paper's two-tier world; any
+    ``*_to_device`` boundary here, or exactly ``source_tier`` when given),
     E11, E12 (claim match, FINISHED_ERROR), E13 (blocking_claim_ids=[C]),
     E14 after E12/E13, all before terminal request handling.
     """
@@ -145,10 +181,10 @@ def check_failure_outcome_path(log: EventLog, claim_id: str, reuse_request_id: s
         after=rr.seq,
         claim_id=claim_id,
         ok=False,
-        direction="host_to_device",
+        direction=_restore_direction(source_tier),
     )
     if t_fail is None:
-        return Verdict.fail("no same-claim host->device transfer failure")
+        return Verdict.fail("no same-claim tier->device transfer failure")
     e11 = _first(ev, "offload_worker_load_failed", after=t_fail.seq, claim_id=claim_id)
     if e11 is None:
         return Verdict.fail("invalid-KV-load path has no affected-block evidence (E11)")

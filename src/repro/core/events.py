@@ -68,6 +68,13 @@ NATIVE_EVENTS = (
     "route_placement",
     "route_reuse_attributed",
     "pressure_eviction",
+    # tiered transfer backend (serving/tiers.py, serving/offload.py)
+    "transfer_job_enqueued",
+    "transfer_batch_executed",
+    "offload_tier_spill",
+    "offload_tier_promote",
+    # continuous batching (serving/engine.py)
+    "batch_scheduled",
 )
 
 ALL_EVENT_NAMES = frozenset(E.values()) | frozenset(NATIVE_EVENTS)

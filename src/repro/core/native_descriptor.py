@@ -391,6 +391,7 @@ def generate_native_descriptor(
         "rows": rows,
     }
     descriptor_path = Path(descriptor_path)
+    descriptor_path.parent.mkdir(parents=True, exist_ok=True)
     descriptor_path.write_text(
         "# GENERATED — do not edit.  Regenerate with:\n"
         "#   PYTHONPATH=src python -m repro.core.native_descriptor\n"

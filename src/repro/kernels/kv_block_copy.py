@@ -9,8 +9,11 @@ defragmentation/compaction.
 """
 from __future__ import annotations
 
+from typing import List, Optional, Sequence
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -40,3 +43,41 @@ def kv_block_copy_pallas(src_pages, indices, *, interpret: bool = False):
         out_shape=jax.ShapeDtypeStruct((M, page, KV, D), src_pages.dtype),
         interpret=interpret,
     )(indices, src_pages)
+
+
+def gather_payloads(arrays: Sequence[np.ndarray], *, interpret: Optional[bool] = None) -> List[np.ndarray]:
+    """Move N same-shape block payloads through ONE batched kernel gather.
+
+    The transfer backend's multi-block jobs land here: instead of N separate
+    per-block copies, the payloads are stacked into a [N, page, KV, D] slab
+    and gathered in a single ``kv_block_copy`` launch (one grid, Mosaic
+    double-buffers consecutive pages).  Payloads whose shapes cannot form a
+    uniform 4-D page layout (e.g. packed state snapshots) fall back to a
+    plain per-array copy — the batching is an optimization, never a
+    correctness dependency.
+
+    Returns freshly materialized numpy arrays in input order.
+    """
+    from repro.kernels import ops
+
+    arrays = [np.asarray(a) for a in arrays]
+    if not arrays:
+        return []
+    shapes = {(a.shape, a.dtype.str) for a in arrays}
+    uniform = len(shapes) == 1 and arrays[0].size > 0
+    if uniform:
+        first = arrays[0]
+        # page layout: flatten leading dims so every payload is one page
+        if first.ndim >= 3:
+            page_shape = (int(np.prod(first.shape[:-2])), first.shape[-2], first.shape[-1])
+        else:
+            page_shape = (first.size, 1, 1)
+        try:
+            src = jnp.asarray(np.stack([a.reshape(page_shape) for a in arrays]))
+            idx = jnp.arange(len(arrays), dtype=jnp.int32)
+            out = ops.kv_block_copy(src, idx, interpret=interpret)
+            out = np.asarray(out)
+            return [out[i].reshape(arrays[i].shape) for i in range(len(arrays))]
+        except Exception:  # unsupported dtype/layout: fall through to copies
+            pass
+    return [np.array(a, copy=True) for a in arrays]

@@ -9,17 +9,24 @@ from __future__ import annotations
 import jax
 
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+def _make_mesh(shape, axes):
+    """jax.make_mesh across JAX versions: the ``axis_types`` kwarg (and the
+    ``jax.sharding.AxisType`` enum backing it) only exists on newer JAX; on
+    0.4.x every axis is implicitly Auto, so calling without it is
+    equivalent."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _make_mesh(shape, axes)
 
 
 def make_debug_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many (host) devices exist — for tests."""
-    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))
+    return _make_mesh((data, model), ("data", "model"))

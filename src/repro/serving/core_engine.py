@@ -1,0 +1,444 @@
+"""The single claim lifecycle implementation shared by every engine.
+
+Before this module existed the ordered, claim-scoped fail-closed path —
+
+  accept(C, P, predicate) -> materialized(C) -> offloaded(C) ->
+  restore_required(C) -> same-claim load failure ->
+  scheduler_resident_claim_restoration_failed(C) ->
+  scheduler_active_request_refused(blocking_claim_ids=[C]) ->
+  ... before terminal request-finished handling
+
+— was implemented twice: once in ``ServingEngine`` over KV block chains and
+again in ``SnapshotEngine`` over recurrent-state snapshots.  ``EngineCore``
+implements it exactly once; the two engines are now thin per-kind layers
+(prefill/decode plumbing) over a shared accept / materialize / offload /
+restore-or-fail-closed core parameterized by a ``CacheObjectKind``
+(serving/cache_object.py).
+
+The scheduler (admission, invalid-KV-load boundary, pressure with ordered
+demotion-before-loss) also lives here — one scheduler for both object kinds.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from functools import lru_cache
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import jax
+
+from repro.core.claims import (
+    CacheIdentity,
+    ClaimMode,
+    ClaimRegistry,
+    ClaimState,
+    ResidentClaim,
+)
+from repro.core.events import EventLog
+from repro.serving.kv_cache import BlockPool, KVBlock, PoolExhausted
+from repro.serving.offload import FailureInjectionConfig, OffloadingConnector
+from repro.serving.tiers import DiskTier, HostTier
+
+
+@lru_cache(maxsize=16)
+def _jitted_steps(bundle, cache_len: int):
+    """Shared jitted prefill/decode per (bundle, cache_len): repetition
+    harnesses spin up hundreds of engines over the same model — recompiling
+    per engine would dominate the run."""
+    return (
+        jax.jit(lambda p, b: bundle.prefill_fn(p, b, cache_len)),
+        jax.jit(bundle.decode_fn),
+    )
+
+
+@dataclass
+class Request:
+    request_id: str
+    tokens: Tuple[int, ...]
+    max_new_tokens: int = 4
+    status: str = "pending"  # pending | running | finished | refused | error
+    output_tokens: List[int] = field(default_factory=list)
+    error: str = ""
+    cached_tokens: int = 0
+    restored_tokens: int = 0
+
+
+@dataclass
+class SchedulerOutcome:
+    """Claim-scoped outcome record attached to a terminal request state."""
+
+    kind: str
+    claim_ids: List[str] = field(default_factory=list)
+    reason: str = ""
+
+
+class Scheduler:
+    """Claim-aware admission + invalid-KV-load outcome boundary."""
+
+    def __init__(self, registry: ClaimRegistry, pool: BlockPool, events: EventLog):
+        self.registry = registry
+        self.pool = pool
+        self._events = events
+
+    def protected_claim_ids(self) -> Set[str]:
+        return {
+            c.claim_id
+            for c in self.registry.active_claims()
+            if c.mode == ClaimMode.HARD_PROTECTED
+        }
+
+    # -- explicit active/resident conflict action (hard_protected) -----------
+    def admission_check(self, request: Request, needed_blocks: int) -> Optional[SchedulerOutcome]:
+        free = self.pool.free_slots
+        if free >= needed_blocks:
+            return None
+        protected = self.protected_claim_ids()
+        evictable = len(self.pool.victim_candidates(protected))
+        if free + evictable >= needed_blocks:
+            return None
+        blocking = sorted(
+            {
+                c
+                for blk in self.pool.blocks.values()
+                if blk.ref == 0
+                for c in blk.claim_ids & protected
+            }
+        )
+        self._events.emit(
+            "scheduler_admission_refused",
+            request_id=request.request_id,
+            blocking_claim_ids=blocking,
+            needed_blocks=needed_blocks,
+            free_blocks=free,
+            evictable_blocks=evictable,
+            conflict_action="refuse",
+        )
+        return SchedulerOutcome("admission_refused", blocking, "active/resident conflict")
+
+    # -- the invalid-KV-load boundary (witness path B, E12/E13) ----------------
+    def on_invalid_kv_load(
+        self, request: Request, failed_claims: List[ResidentClaim], reason: str
+    ) -> SchedulerOutcome:
+        blocking = []
+        for claim in failed_claims:
+            claim.transition(ClaimState.RESTORATION_FAILED)
+            self._events.emit(
+                "scheduler_resident_claim_restoration_failed",
+                request_id=request.request_id,
+                claim_id=claim.claim_id,
+                object_id=claim.object_id,
+                reason=reason,
+                request_status="FINISHED_ERROR",
+            )
+            blocking.append(claim.claim_id)
+        self._events.emit(
+            "scheduler_active_request_refused",
+            request_id=request.request_id,
+            blocking_claim_ids=blocking,
+            reason=reason,
+        )
+        return SchedulerOutcome("active_request_refused", blocking, reason)
+
+    # -- pressure with ordered demotion-before-loss ------------------------------
+    def apply_pressure(self, n_blocks: int) -> List[KVBlock]:
+        protected = self.protected_claim_ids()
+        victims = self.pool.victim_candidates(protected)[:n_blocks]
+        if len(victims) < n_blocks:
+            blocking = sorted(
+                {
+                    c
+                    for blk in self.pool.blocks.values()
+                    if blk.ref == 0
+                    for c in blk.claim_ids & protected
+                }
+            )
+            raise PoolExhausted(f"pressure needs {n_blocks} blocks", blocking)
+        # ordered: demote demotable claims BEFORE their blocks are lost
+        demoted: Set[str] = set()
+        for blk in victims:
+            for cid in sorted(blk.claim_ids):
+                claim = self.registry.maybe_get(cid)
+                if claim and claim.mode == ClaimMode.DEMOTABLE and cid not in demoted:
+                    if claim.state in (ClaimState.ACCEPTED, ClaimState.MATERIALIZED, ClaimState.RESTORED):
+                        self.registry.mark(
+                            claim,
+                            ClaimState.DEMOTED,
+                            "resident_claim_demoted",
+                            before_loss=True,
+                            trigger="pressure",
+                        )
+                        demoted.add(cid)
+        out = []
+        for blk in victims:
+            self._events.emit(
+                "pressure_eviction",
+                block_id=blk.block_id,
+                priority=blk.priority,
+                claim_id=sorted(blk.claim_ids)[0] if blk.claim_ids else None,
+            )
+            out.append(self.pool.remove(blk.block_id, reason="pressure"))
+        # harm attribution: predicate-breaking loss of still-responsible claims
+        lost_claims: Set[str] = {c for blk in out for c in blk.claim_ids}
+        for cid in sorted(lost_claims):
+            claim = self.registry.maybe_get(cid)
+            if claim and claim.state == ClaimState.MATERIALIZED:
+                self.registry.mark(
+                    claim,
+                    ClaimState.HARMED,
+                    "resident_claim_harmed",
+                    predicate=claim.predicate.name,
+                    cause="pressure_eviction",
+                )
+        return out
+
+    def sweep_expiry(self, now: Optional[float] = None) -> List[ResidentClaim]:
+        return self.registry.expire_due(now)
+
+
+class EngineCore:
+    """Shared engine substrate: registry, pools, tiers, connector, scheduler,
+    and the claim lifecycle (implemented here and ONLY here).
+
+    Subclasses supply ``kind`` (a CacheObjectKind) plus the model-execution
+    plumbing, and implement ``_claim_device_blocks`` — "which device blocks
+    embody this claim's object right now".
+    """
+
+    kind = None  # set by subclass
+
+    def __init__(
+        self,
+        bundle,
+        params,
+        *,
+        block_size: int,
+        device_blocks: int,
+        cache_len: int,
+        event_log: Optional[EventLog] = None,
+        injection: Optional[FailureInjectionConfig] = None,
+        namespace: str = "default",
+        host_blocks: Optional[int] = None,
+        disk_dir=None,
+    ):
+        self.bundle = bundle
+        self.cfg = bundle.cfg
+        self.params = params
+        self.block_size = block_size
+        self.cache_len = cache_len
+        self.events = event_log or EventLog()
+        self.identity = CacheIdentity(
+            model=self.cfg.name,
+            tokenizer_hash="synthetic-tokenizer-v1",
+            namespace=namespace,
+            block_size=block_size,
+        )
+        self.registry = ClaimRegistry(self.events, self.identity)
+        self.pool = BlockPool(device_blocks, self.events)
+        self.host = HostTier(host_blocks)
+        self.disk = DiskTier(disk_dir)
+        self.connector = OffloadingConnector(
+            self.pool, self.host, self.events, injection, disk_pool=self.disk
+        )
+        self.scheduler = Scheduler(self.registry, self.pool, self.events)
+        self._req_ids = itertools.count()
+        self.requests: Dict[str, Request] = {}
+        self._claim_prefixes: Dict[str, Tuple[int, ...]] = {}
+        self._jit_prefill, self._jit_decode = _jitted_steps(bundle, cache_len)
+
+    # ------------------------------------------------------------------ claims
+    def accept_claim(
+        self,
+        prefix_tokens: Sequence[int],
+        mode: ClaimMode,
+        *,
+        predicate_k: Optional[int] = None,
+        priority: int = 0,
+        duration_s: Optional[float] = None,
+    ) -> ResidentClaim:
+        """Accept (or fail-closed reject) a claim over this engine's object kind."""
+        prefix = tuple(int(t) for t in prefix_tokens)
+        claim = self.registry.accept(
+            self.kind.object_id(prefix, self.block_size),
+            self.kind.predicate(prefix, self.block_size, predicate_k),
+            mode,
+            priority=priority,
+            duration_s=duration_s,
+            max_prefix_window=self.kind.window_limit(self.cfg),
+        )
+        self._claim_prefixes[claim.claim_id] = prefix
+        return claim
+
+    def _matching_claims(self, tokens: Tuple[int, ...]) -> List[ResidentClaim]:
+        """Active claims whose prefix is a leading prefix of ``tokens``."""
+        out = []
+        for c in self.registry.active_claims():
+            prefix = self._claim_prefixes.get(c.claim_id)
+            if prefix is not None and tokens[: len(prefix)] == prefix:
+                out.append(c)
+        return out
+
+    def _claims_on_chain(self, chains: Sequence[str]) -> List[ResidentClaim]:
+        """Claims whose object chain terminates in one of these block chains."""
+        chain_set = set(chains)
+        return [
+            c
+            for c in self.registry.all_claims()
+            if self.kind.object_id(self._claim_prefixes.get(c.claim_id, ()), self.block_size)
+            in chain_set
+        ]
+
+    # ---------------------------------------------------------------- requests
+    def _new_request(self, tokens: Sequence[int], max_new_tokens: int) -> Request:
+        """Create + register a request and emit E0 with its claim metadata."""
+        req = Request(
+            request_id=f"req-{next(self._req_ids):04d}",
+            tokens=tuple(int(t) for t in tokens),
+            max_new_tokens=max_new_tokens,
+        )
+        self.requests[req.request_id] = req
+        claims = sorted(c.claim_id for c in self._matching_claims(req.tokens))
+        self.events.emit(
+            "request_initialized",
+            request_id=req.request_id,
+            n_tokens=len(req.tokens),
+            claim_metadata=claims,
+        )
+        return req
+
+    # -------------------------------------------------------------- materialize
+    def _materialize_claim(
+        self,
+        claim: ResidentClaim,
+        *,
+        materialized_tokens: int,
+        n_blocks: int,
+        footprint_bytes: int,
+        request_id: Optional[str] = None,
+    ) -> None:
+        """Claim-scoped materialization at this kind's named observation point."""
+        claim.footprint_bytes = footprint_bytes
+        self.registry.mark(
+            claim,
+            ClaimState.MATERIALIZED,
+            "claim_materialized",
+            predicate=claim.predicate.name,
+            observation_point=self.kind.observation_point,
+            materialized_tokens=materialized_tokens,
+            request_id=request_id,
+        )
+        self.events.emit(
+            "claim_footprint_accounted",
+            claim_id=claim.claim_id,
+            footprint_bytes=claim.footprint_bytes,
+            n_blocks=n_blocks,
+        )
+
+    # ---------------------------------------------------------------- offload
+    def _claim_device_blocks(self, claim: ResidentClaim) -> Optional[List[KVBlock]]:
+        """Device blocks embodying the claim's object, or None if incomplete."""
+        raise NotImplementedError
+
+    def offload_claim(
+        self, claim_id: str, request_id: Optional[str] = None, tier: str = "host"
+    ) -> bool:
+        """Move a materialized claim's blocks device -> off-device tier
+        (witness step 2).  ``tier`` may target "disk" directly."""
+        claim = self.registry.get(claim_id)
+        blocks = self._claim_device_blocks(claim)
+        if not blocks:
+            return False
+        job = self.connector.store(
+            blocks, claim_id=claim_id, request_id=request_id, tier=tier
+        )
+        if job.ok:
+            self.registry.mark(
+                claim,
+                ClaimState.OFFLOADED,
+                "resident_claim_offloaded",
+                n_blocks=len(blocks),
+                request_id=request_id,
+                tier=tier,
+            )
+        self.connector.complete_job(job)
+        return job.ok
+
+    # ----------------------------------------------- restore-before-reuse path
+    def _restore_for_request(
+        self,
+        req: Request,
+        hit_blocks: List[KVBlock],
+        restore_claims: Optional[List[ResidentClaim]] = None,
+    ) -> bool:
+        """THE fail-closed restoration boundary (witness paths A and B).
+
+        Marks restore_required, runs the load job, and on a same-claim
+        failure drives the scheduler's invalid-KV-load outcome (E11 -> E12 ->
+        E13 with blocking_claim_ids -> E14) strictly before terminal request
+        handling.  An unclaimed failure errors the request WITHOUT claim
+        outcomes (fail closed).  Returns True iff the restore succeeded;
+        on False the request is already terminal.
+        """
+        if restore_claims is None:
+            restore_claims = [
+                c
+                for c in self._claims_on_chain([b.chain for b in hit_blocks])
+                if c.state == ClaimState.OFFLOADED
+            ]
+        for claim in restore_claims:
+            self.registry.mark(
+                claim,
+                ClaimState.RESTORE_REQUIRED,
+                "resident_claim_restore_required",
+                request_id=req.request_id,
+                predicate=claim.predicate.name,
+            )
+        job = self.connector.load(
+            hit_blocks,
+            claim_id=restore_claims[0].claim_id if restore_claims else None,
+            request_id=req.request_id,
+            protected_claims=self.scheduler.protected_claim_ids(),
+        )
+        if not job.ok:
+            if restore_claims:
+                # scheduler invalid-KV-load boundary: claim-scoped,
+                # fail-closed, ordered BEFORE terminal handling (path B)
+                outcome = self.scheduler.on_invalid_kv_load(
+                    req,
+                    [c for c in restore_claims if c.state == ClaimState.RESTORE_REQUIRED],
+                    reason=self.connector.injection.failure_reason,
+                )
+                req.status = "refused"
+                req.error = outcome.reason
+            else:
+                # unclaimed generic failure: NOT a claim outcome (fail closed);
+                # the request errors without claim-scoped scheduler events.
+                req.status = "error"
+                req.error = "unclaimed_load_failure"
+            self.events.emit(
+                "offload_request_finished_pending_jobs",
+                request_id=req.request_id,
+                job_id=job.job_id,
+            )
+            self.events.emit(
+                "request_finished", request_id=req.request_id, status="FINISHED_ERROR"
+            )
+            return False
+        for claim in restore_claims:
+            self.registry.mark(
+                claim,
+                ClaimState.RESTORED,
+                "resident_claim_restored",
+                request_id=req.request_id,
+            )
+        req.restored_tokens = sum(len(b.tokens) for b in hit_blocks)
+        self.connector.complete_job(job)
+        return True
+
+    # ---------------------------------------------------------------- terminal
+    def _finish_ok(self, req: Request) -> Request:
+        req.status = "finished"
+        self.events.emit(
+            "offload_request_finished_no_pending_jobs", request_id=req.request_id
+        )
+        self.events.emit("request_finished", request_id=req.request_id, status="FINISHED_OK")
+        return req

@@ -1,4 +1,4 @@
-"""Claim-native serving engine: scheduler, request lifecycle, witness paths.
+"""Claim-native KV serving engine: continuous batching over the shared core.
 
 This is the runtime the paper's patched-vLLM witness *demonstrates the
 implementability of* — here built natively (DESIGN.md §2).  The decisive
@@ -10,9 +10,15 @@ property is the ordered, claim-scoped path:
   scheduler_active_request_refused(blocking_claim_ids=[C]) ->
   ... before terminal request-finished handling.
 
-Generic transfer counters, fallback recomputation, wrong-claim failure, or
-unclaimed failure never produce these events (fail-closed); the analyzer
-(core/analyzer.py) and the repetition gates (benchmarks) check exactly this.
+The claim lifecycle itself lives in ``core_engine.EngineCore`` — ONE
+implementation shared with the snapshot engine; this module adds only what
+is specific to KV block chains (prefix-block storage, dense-cache assembly)
+and the execution strategy: **continuous batching** — ``run_batch`` admits
+any number of requests under claim-scoped admission, runs their restore /
+prefill phases through the shared fail-closed boundary, then decodes every
+in-flight request with ONE jitted step per token position (the jitted-step
+cache is shared across engines), preserving the per-request ordered event
+stream the analyzer checks.  ``run(req)`` is ``run_batch([req])``.
 
 The engine runs a REAL JAX model: cached/restored block payloads are the
 bytes decode attends over, so a failed restore genuinely leaves the request
@@ -21,40 +27,23 @@ restoration failure — that is the fail-closed semantics).
 """
 from __future__ import annotations
 
-import itertools
 import math
-import time
-from dataclasses import dataclass, field
-from functools import lru_cache
 from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-
-@lru_cache(maxsize=16)
-def _jitted_steps(bundle, cache_len: int):
-    """Shared jitted prefill/decode per (bundle, cache_len): repetition
-    harnesses spin up hundreds of engines over the same model — recompiling
-    per engine would dominate the run."""
-    return (
-        jax.jit(lambda p, b: bundle.prefill_fn(p, b, cache_len)),
-        jax.jit(bundle.decode_fn),
-    )
-
-from repro.core.claims import (
-    CacheIdentity,
-    ClaimMode,
-    ClaimRegistry,
-    ClaimState,
-    MaterializationPredicate,
-    ResidentClaim,
+from repro.core.claims import ClaimState, ResidentClaim
+from repro.serving.cache_object import KVChainKind
+from repro.serving.core_engine import (
+    EngineCore,
+    Request,
+    Scheduler,
+    SchedulerOutcome,
+    _jitted_steps,
 )
-from repro.core.events import EventLog
 from repro.serving.kv_cache import (
     BlockPool,
-    HostPool,
     KVBlock,
     PoolExhausted,
     chain_hash,
@@ -62,153 +51,19 @@ from repro.serving.kv_cache import (
 )
 from repro.serving.offload import FailureInjectionConfig, OffloadingConnector
 
-
-@dataclass
-class Request:
-    request_id: str
-    tokens: Tuple[int, ...]
-    max_new_tokens: int = 4
-    status: str = "pending"  # pending | running | finished | refused | error
-    output_tokens: List[int] = field(default_factory=list)
-    error: str = ""
-    cached_tokens: int = 0
-    restored_tokens: int = 0
+__all__ = [
+    "Request",
+    "Scheduler",
+    "SchedulerOutcome",
+    "ServingEngine",
+    "_jitted_steps",
+]
 
 
-@dataclass
-class SchedulerOutcome:
-    """Claim-scoped outcome record attached to a terminal request state."""
+class ServingEngine(EngineCore):
+    """Claim-native engine over KV block chains with continuous batching."""
 
-    kind: str
-    claim_ids: List[str] = field(default_factory=list)
-    reason: str = ""
-
-
-class Scheduler:
-    """Claim-aware admission + invalid-KV-load outcome boundary."""
-
-    def __init__(self, registry: ClaimRegistry, pool: BlockPool, events: EventLog):
-        self.registry = registry
-        self.pool = pool
-        self._events = events
-
-    def protected_claim_ids(self) -> Set[str]:
-        return {
-            c.claim_id
-            for c in self.registry.active_claims()
-            if c.mode == ClaimMode.HARD_PROTECTED
-        }
-
-    # -- explicit active/resident conflict action (hard_protected) -----------
-    def admission_check(self, request: Request, needed_blocks: int) -> Optional[SchedulerOutcome]:
-        free = self.pool.free_slots
-        if free >= needed_blocks:
-            return None
-        protected = self.protected_claim_ids()
-        evictable = len(self.pool.victim_candidates(protected))
-        if free + evictable >= needed_blocks:
-            return None
-        blocking = sorted(
-            {
-                c
-                for blk in self.pool.blocks.values()
-                if blk.ref == 0
-                for c in blk.claim_ids & protected
-            }
-        )
-        self._events.emit(
-            "scheduler_admission_refused",
-            request_id=request.request_id,
-            blocking_claim_ids=blocking,
-            needed_blocks=needed_blocks,
-            free_blocks=free,
-            evictable_blocks=evictable,
-            conflict_action="refuse",
-        )
-        return SchedulerOutcome("admission_refused", blocking, "active/resident conflict")
-
-    # -- the invalid-KV-load boundary (witness path B, E12/E13) ----------------
-    def on_invalid_kv_load(
-        self, request: Request, failed_claims: List[ResidentClaim], reason: str
-    ) -> SchedulerOutcome:
-        blocking = []
-        for claim in failed_claims:
-            claim.transition(ClaimState.RESTORATION_FAILED)
-            self._events.emit(
-                "scheduler_resident_claim_restoration_failed",
-                request_id=request.request_id,
-                claim_id=claim.claim_id,
-                object_id=claim.object_id,
-                reason=reason,
-                request_status="FINISHED_ERROR",
-            )
-            blocking.append(claim.claim_id)
-        self._events.emit(
-            "scheduler_active_request_refused",
-            request_id=request.request_id,
-            blocking_claim_ids=blocking,
-            reason=reason,
-        )
-        return SchedulerOutcome("active_request_refused", blocking, reason)
-
-    # -- pressure with ordered demotion-before-loss ------------------------------
-    def apply_pressure(self, n_blocks: int) -> List[KVBlock]:
-        protected = self.protected_claim_ids()
-        victims = self.pool.victim_candidates(protected)[:n_blocks]
-        if len(victims) < n_blocks:
-            blocking = sorted(
-                {
-                    c
-                    for blk in self.pool.blocks.values()
-                    if blk.ref == 0
-                    for c in blk.claim_ids & protected
-                }
-            )
-            raise PoolExhausted(f"pressure needs {n_blocks} blocks", blocking)
-        # ordered: demote demotable claims BEFORE their blocks are lost
-        demoted: Set[str] = set()
-        for blk in victims:
-            for cid in sorted(blk.claim_ids):
-                claim = self.registry.maybe_get(cid)
-                if claim and claim.mode == ClaimMode.DEMOTABLE and cid not in demoted:
-                    if claim.state in (ClaimState.ACCEPTED, ClaimState.MATERIALIZED, ClaimState.RESTORED):
-                        self.registry.mark(
-                            claim,
-                            ClaimState.DEMOTED,
-                            "resident_claim_demoted",
-                            before_loss=True,
-                            trigger="pressure",
-                        )
-                        demoted.add(cid)
-        out = []
-        for blk in victims:
-            self._events.emit(
-                "pressure_eviction",
-                block_id=blk.block_id,
-                priority=blk.priority,
-                claim_id=sorted(blk.claim_ids)[0] if blk.claim_ids else None,
-            )
-            out.append(self.pool.remove(blk.block_id, reason="pressure"))
-        # harm attribution: predicate-breaking loss of still-responsible claims
-        lost_claims: Set[str] = {c for blk in out for c in blk.claim_ids}
-        for cid in sorted(lost_claims):
-            claim = self.registry.maybe_get(cid)
-            if claim and claim.state == ClaimState.MATERIALIZED:
-                self.registry.mark(
-                    claim,
-                    ClaimState.HARMED,
-                    "resident_claim_harmed",
-                    predicate=claim.predicate.name,
-                    cause="pressure_eviction",
-                )
-        return out
-
-    def sweep_expiry(self, now: Optional[float] = None) -> List[ResidentClaim]:
-        return self.registry.expire_due(now)
-
-
-class ServingEngine:
-    """Single-replica claim-native engine over a real JAX model."""
+    kind = KVChainKind()
 
     def __init__(
         self,
@@ -218,67 +73,26 @@ class ServingEngine:
         block_size: int = 8,
         device_blocks: int = 64,
         cache_len: int = 128,
-        event_log: Optional[EventLog] = None,
+        event_log=None,
         injection: Optional[FailureInjectionConfig] = None,
         namespace: str = "default",
+        host_blocks: Optional[int] = None,
+        disk_dir=None,
     ):
-        self.bundle = bundle
-        self.cfg = bundle.cfg
-        self.params = params
-        self.block_size = block_size
-        self.cache_len = cache_len
-        self.events = event_log or EventLog()
-        self.identity = CacheIdentity(
-            model=self.cfg.name,
-            tokenizer_hash="synthetic-tokenizer-v1",
-            namespace=namespace,
+        super().__init__(
+            bundle,
+            params,
             block_size=block_size,
+            device_blocks=device_blocks,
+            cache_len=cache_len,
+            event_log=event_log,
+            injection=injection,
+            namespace=namespace,
+            host_blocks=host_blocks,
+            disk_dir=disk_dir,
         )
-        self.registry = ClaimRegistry(self.events, self.identity)
-        self.pool = BlockPool(device_blocks, self.events)
-        self.host = HostPool()
-        self.connector = OffloadingConnector(self.pool, self.host, self.events, injection)
-        self.scheduler = Scheduler(self.registry, self.pool, self.events)
-        self._req_ids = itertools.count()
-        self.requests: Dict[str, Request] = {}
-        self._claim_prefixes: Dict[str, Tuple[int, ...]] = {}
-        self._jit_prefill, self._jit_decode = _jitted_steps(bundle, cache_len)
 
     # ------------------------------------------------------------------ claims
-    def accept_claim(
-        self,
-        prefix_tokens: Sequence[int],
-        mode: ClaimMode,
-        *,
-        predicate_k: Optional[int] = None,
-        priority: int = 0,
-        duration_s: Optional[float] = None,
-    ) -> ResidentClaim:
-        prefix = tuple(int(t) for t in prefix_tokens)
-        usable = len(prefix) - len(prefix) % self.block_size
-        k = predicate_k if predicate_k is not None else usable
-        object_id = prefix_object_id(prefix, self.block_size)
-        claim = self.registry.accept(
-            object_id,
-            MaterializationPredicate("leading_prefix_at_least", k),
-            mode,
-            priority=priority,
-            duration_s=duration_s,
-            max_prefix_window=self.cfg.sliding_window or None,
-        )
-        self._claim_prefixes[claim.claim_id] = prefix
-        return claim
-
-    def _claims_on_chain(self, chains: Sequence[str]) -> List[ResidentClaim]:
-        """Claims whose object chain terminates in one of these block chains."""
-        chain_set = set(chains)
-        return [
-            c
-            for c in self.registry.all_claims()
-            if prefix_object_id(self._claim_prefixes.get(c.claim_id, ()), self.block_size)
-            in chain_set
-        ]
-
     def _claims_covering_block(self, chain: str, block_index: int) -> Set[str]:
         """Claim ids whose prefix includes the block at this chain position."""
         out = set()
@@ -292,26 +106,17 @@ class ServingEngine:
                     out.add(cid)
         return out
 
+    def _claim_device_blocks(self, claim: ResidentClaim) -> Optional[List[KVBlock]]:
+        prefix = self._claim_prefixes[claim.claim_id]
+        blocks = self.pool.lookup_prefix(prefix, self.block_size)
+        nblocks = len(prefix) // self.block_size
+        if len(blocks) < nblocks:
+            return None
+        return blocks[:nblocks]
+
     # ---------------------------------------------------------------- requests
     def submit(self, tokens: Sequence[int], max_new_tokens: int = 4) -> Request:
-        req = Request(
-            request_id=f"req-{next(self._req_ids):04d}",
-            tokens=tuple(int(t) for t in tokens),
-            max_new_tokens=max_new_tokens,
-        )
-        self.requests[req.request_id] = req
-        claims = [
-            c.claim_id
-            for c in self.registry.active_claims()
-            if self._claim_prefixes.get(c.claim_id, (None,)) == req.tokens[: len(self._claim_prefixes.get(c.claim_id, ()))]
-        ]
-        self.events.emit(
-            "request_initialized",
-            request_id=req.request_id,
-            n_tokens=len(req.tokens),
-            claim_metadata=sorted(claims),
-        )
-        return req
+        return self._new_request(tokens, max_new_tokens)
 
     # ------------------------------------------------------------ cache plumbing
     def _dense_cache(self, blocks: List[KVBlock], batch: int = 1):
@@ -360,63 +165,38 @@ class ServingEngine:
 
     def _materialize_claims(self, req: Request, materialized_tokens: int) -> None:
         """Named observation point: prefill_complete."""
-        for claim in self.registry.active_claims():
-            prefix = self._claim_prefixes.get(claim.claim_id)
-            if prefix is None or req.tokens[: len(prefix)] != prefix:
-                continue
+        for claim in self._matching_claims(req.tokens):
             if claim.state != ClaimState.ACCEPTED:
                 continue
             if claim.predicate.evaluate(materialized_tokens):
+                prefix = self._claim_prefixes[claim.claim_id]
                 nblocks = len(prefix) // self.block_size
                 bytes_per_block = next(
                     (b.nbytes for b in self.pool.blocks.values()), 0
                 )
-                claim.footprint_bytes = nblocks * bytes_per_block
-                self.registry.mark(
+                self._materialize_claim(
                     claim,
-                    ClaimState.MATERIALIZED,
-                    "claim_materialized",
-                    predicate=claim.predicate.name,
-                    observation_point="prefill_complete",
                     materialized_tokens=materialized_tokens,
+                    n_blocks=nblocks,
+                    footprint_bytes=nblocks * bytes_per_block,
                     request_id=req.request_id,
                 )
-                self.events.emit(
-                    "claim_footprint_accounted",
-                    claim_id=claim.claim_id,
-                    footprint_bytes=claim.footprint_bytes,
-                    n_blocks=nblocks,
-                )
-
-    # ---------------------------------------------------------------- offload
-    def offload_claim(self, claim_id: str, request_id: Optional[str] = None) -> bool:
-        """Move a materialized claim's blocks device -> host (witness step 2)."""
-        claim = self.registry.get(claim_id)
-        prefix = self._claim_prefixes[claim_id]
-        blocks = self.pool.lookup_prefix(prefix, self.block_size)
-        nblocks = len(prefix) // self.block_size
-        if len(blocks) < nblocks:
-            return False
-        job = self.connector.store(blocks[:nblocks], claim_id=claim_id, request_id=request_id)
-        if job.ok:
-            self.registry.mark(
-                claim,
-                ClaimState.OFFLOADED,
-                "resident_claim_offloaded",
-                n_blocks=nblocks,
-                request_id=request_id,
-            )
-        self.connector.complete_job(job)
-        return job.ok
 
     # ---------------------------------------------------------------- execution
     def run(self, req: Request) -> Request:
         """Execute a request to completion (prefill + greedy decode)."""
+        return self.run_batch([req])[0]
+
+    def _prepare(self, req: Request) -> Optional[Dict[str, Any]]:
+        """Admission + restore + prefill for one request.
+
+        Returns a decode entry {req, cache, logits, pos} for requests that
+        reach the decode phase, or None when the request already terminated
+        (admission refusal or fail-closed restoration outcome).  The claim
+        lifecycle here is entirely the shared EngineCore implementation.
+        """
         req.status = "running"
         total_needed = math.ceil((len(req.tokens) + req.max_new_tokens) / self.block_size)
-
-        # --- expiry boundary sweep precedes scheduling ---
-        self.scheduler.sweep_expiry()
 
         # --- explicit active/resident conflict action (admission) ---
         refusal = self.scheduler.admission_check(req, total_needed)
@@ -426,84 +206,22 @@ class ServingEngine:
             self.events.emit(
                 "request_finished", request_id=req.request_id, status="REFUSED_ADMISSION"
             )
-            return req
+            return None
 
         # --- device-resident prefix reuse ---
         dev_blocks = self.pool.lookup_prefix(req.tokens, self.block_size)
 
-        # --- host-side (offloaded) continuation: the restore-before-reuse path ---
-        host_blocks = self.connector.lookup(
+        # --- off-device (offloaded) continuation: restore-before-reuse ---
+        hit_blocks = self.connector.lookup(
             req.tokens,
             self.block_size,
             req.request_id,
             skip_blocks=len(dev_blocks),
             start_chain=dev_blocks[-1].chain if dev_blocks else "",
         )
-
-        if host_blocks:
-            chains = [b.chain for b in host_blocks]
-            restore_claims = [
-                c
-                for c in self._claims_on_chain(chains)
-                if c.state == ClaimState.OFFLOADED
-            ]
-            for claim in restore_claims:
-                self.registry.mark(
-                    claim,
-                    ClaimState.RESTORE_REQUIRED,
-                    "resident_claim_restore_required",
-                    request_id=req.request_id,
-                    predicate=claim.predicate.name,
-                )
-            claim_id = restore_claims[0].claim_id if restore_claims else None
-            job = self.connector.load(
-                host_blocks,
-                claim_id=claim_id,
-                request_id=req.request_id,
-                protected_claims=self.scheduler.protected_claim_ids(),
-            )
-            if not job.ok:
-                if restore_claims:
-                    # scheduler invalid-KV-load boundary: claim-scoped,
-                    # fail-closed, ordered BEFORE terminal handling (path B)
-                    outcome = self.scheduler.on_invalid_kv_load(
-                        req,
-                        [c for c in restore_claims if c.state == ClaimState.RESTORE_REQUIRED],
-                        reason=self.connector.injection.failure_reason,
-                    )
-                    req.status = "refused"
-                    req.error = outcome.reason
-                    self.events.emit(
-                        "offload_request_finished_pending_jobs",
-                        request_id=req.request_id,
-                        job_id=job.job_id,
-                    )
-                    self.events.emit(
-                        "request_finished", request_id=req.request_id, status="FINISHED_ERROR"
-                    )
-                    return req
-                # unclaimed generic failure: NOT a claim outcome (fail closed);
-                # the request errors without claim-scoped scheduler events.
-                req.status = "error"
-                req.error = "unclaimed_load_failure"
-                self.events.emit(
-                    "offload_request_finished_pending_jobs",
-                    request_id=req.request_id,
-                    job_id=job.job_id,
-                )
-                self.events.emit(
-                    "request_finished", request_id=req.request_id, status="FINISHED_ERROR"
-                )
-                return req
-            for claim in restore_claims:
-                self.registry.mark(
-                    claim,
-                    ClaimState.RESTORED,
-                    "resident_claim_restored",
-                    request_id=req.request_id,
-                )
-            req.restored_tokens = sum(len(b.tokens) for b in host_blocks)
-            self.connector.complete_job(job)
+        if hit_blocks:
+            if not self._restore_for_request(req, hit_blocks):
+                return None
             dev_blocks = self.pool.lookup_prefix(req.tokens, self.block_size)
 
         # --- prefill (reused blocks are NOT recomputed) ---
@@ -513,10 +231,12 @@ class ServingEngine:
             b.ref += 1
         try:
             if cached == 0:
-                logits, cache = self._jit_prefill(self.params, {"tokens": jnp.asarray([req.tokens], jnp.int32)})
+                logits, cache = self._jit_prefill(
+                    self.params, {"tokens": jnp.asarray([req.tokens], jnp.int32)}
+                )
                 logits = logits[0]
             else:
-                cache, n = self._dense_cache(dev_blocks)
+                cache, _n = self._dense_cache(dev_blocks)
                 logits = None
                 for i, tok in enumerate(req.tokens[cached:]):
                     lg, cache = self._jit_decode(
@@ -534,26 +254,119 @@ class ServingEngine:
                         jnp.asarray([len(req.tokens) - 1], jnp.int32),
                     )
                     logits = lg[0]
-            new_blocks = self._store_prefix_blocks(req, cache, len(req.tokens))
-            self._materialize_claims(req, len(req.tokens) - len(req.tokens) % self.block_size)
-
-            # --- greedy decode ---
-            pos = len(req.tokens)
-            for _ in range(req.max_new_tokens):
-                tok = int(jnp.argmax(logits))
-                req.output_tokens.append(tok)
-                lg, cache = self._jit_decode(
-                    self.params, cache, jnp.asarray([tok], jnp.int32), jnp.asarray([pos], jnp.int32)
-                )
-                logits = lg[0]
-                pos += 1
+            self._store_prefix_blocks(req, cache, len(req.tokens))
+            self._materialize_claims(
+                req, len(req.tokens) - len(req.tokens) % self.block_size
+            )
         finally:
             for b in dev_blocks:
                 b.ref -= 1
+        return {"req": req, "cache": cache, "logits": logits, "pos": len(req.tokens)}
 
-        req.status = "finished"
-        self.events.emit(
-            "offload_request_finished_no_pending_jobs", request_id=req.request_id
-        )
-        self.events.emit("request_finished", request_id=req.request_id, status="FINISHED_OK")
-        return req
+    @staticmethod
+    def _stack_caches(caches: List[Any]):
+        """Stack B single-request dense caches into one [B]-batched cache.
+
+        ServingEngine caches are transformer-style dicts: ``pos`` is
+        [B, Sc] (batch axis 0); ``k``/``v`` (and int8 scales) carry the
+        batch on axis 1.
+        """
+        out = {}
+        for key in caches[0]:
+            axis = 0 if key == "pos" else 1
+            out[key] = jnp.concatenate([c[key] for c in caches], axis=axis)
+        return out
+
+    def _decode_sequential(self, entry: Dict[str, Any]) -> None:
+        """Single-request greedy decode (the B=1 fast path — identical event
+        and compute stream to the pre-batching engine)."""
+        req, cache, logits, pos = entry["req"], entry["cache"], entry["logits"], entry["pos"]
+        for _ in range(req.max_new_tokens):
+            tok = int(jnp.argmax(logits))
+            req.output_tokens.append(tok)
+            lg, cache = self._jit_decode(
+                self.params, cache, jnp.asarray([tok], jnp.int32), jnp.asarray([pos], jnp.int32)
+            )
+            logits = lg[0]
+            pos += 1
+
+    def _decode_batched(self, entries: List[Dict[str, Any]]) -> None:
+        """Continuous-batched greedy decode: ONE jitted step per position for
+        every in-flight request (vs one step per request per position)."""
+        B = len(entries)
+        cache = self._stack_caches([e["cache"] for e in entries])
+        logits = jnp.stack([e["logits"] for e in entries])  # [B, V]
+        pos = np.asarray([e["pos"] for e in entries], np.int32)
+        reqs = [e["req"] for e in entries]
+        max_steps = max(r.max_new_tokens for r in reqs)
+        last_tok = np.zeros(B, np.int32)
+        for step in range(max_steps):
+            toks = np.array(jnp.argmax(logits, axis=-1), np.int32)  # writable copy
+            for i, r in enumerate(reqs):
+                if step < r.max_new_tokens:
+                    r.output_tokens.append(int(toks[i]))
+                    last_tok[i] = toks[i]
+                else:
+                    # finished rows re-feed their last token at a frozen
+                    # position: a no-op replay that keeps the batch dense
+                    toks[i] = last_tok[i]
+            lg, cache = self._jit_decode(
+                self.params, cache, jnp.asarray(toks), jnp.asarray(pos)
+            )
+            logits = lg
+            for i, r in enumerate(reqs):
+                if step + 1 < r.max_new_tokens:
+                    pos[i] += 1
+        return None
+
+    def run_batch(self, reqs: Sequence[Request]) -> List[Request]:
+        """Continuous batching: admit, restore and prefill each request under
+        the shared claim lifecycle, then decode all survivors together.
+
+        Per-request event ordering (E0 .. terminal) is exactly the
+        single-request stream; claim-scoped admission refusals and
+        fail-closed restoration outcomes drop a request from the batch
+        without affecting the others (PoolExhausted attribution and
+        blocking_claim_ids are per-request, as in witness path C).
+        """
+        reqs = list(reqs)
+        # --- expiry boundary sweep precedes scheduling ---
+        self.scheduler.sweep_expiry()
+        if len(reqs) > 1:
+            self.events.emit(
+                "batch_scheduled",
+                batch_size=len(reqs),
+                request_ids=[r.request_id for r in reqs],
+            )
+        entries = []
+        for req in reqs:
+            try:
+                entry = self._prepare(req)
+            except PoolExhausted as e:
+                # mid-prefill/restore allocation hit protected-claim blocks:
+                # refuse THIS request with blocking-claim attribution and keep
+                # the rest of the batch running (per-request isolation)
+                req.status = "refused"
+                req.error = str(e)
+                self.events.emit(
+                    "scheduler_admission_refused",
+                    request_id=req.request_id,
+                    blocking_claim_ids=e.blocking_claim_ids,
+                    conflict_action="refuse",
+                    stage="allocation",
+                )
+                self.events.emit(
+                    "request_finished",
+                    request_id=req.request_id,
+                    status="REFUSED_ADMISSION",
+                )
+                continue
+            if entry is not None:
+                entries.append(entry)
+        if len(entries) == 1:
+            self._decode_sequential(entries[0])
+        elif entries:
+            self._decode_batched(entries)
+        for entry in entries:
+            self._finish_ok(entry["req"])
+        return reqs

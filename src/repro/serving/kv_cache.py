@@ -40,18 +40,33 @@ class KVBlock:
     block_id: int
     tokens: Tuple[int, ...]
     chain: str  # hash of the prefix up to and including this block
-    k: np.ndarray  # [L, block_size, KV, Dh]
+    k: np.ndarray  # [L, block_size, KV, Dh]  (None while spilled to disk)
     v: np.ndarray
     positions: np.ndarray  # [block_size] absolute positions
-    location: str = "device"  # "device" | "host"
+    location: str = "device"  # "device" | "host" | "disk"
     ref: int = 0
     priority: int = 0
     claim_ids: Set[str] = field(default_factory=set)
     last_use: float = 0.0
+    _released_nbytes: int = 0  # payload size while spilled (k/v are None)
 
     @property
     def nbytes(self) -> int:
-        return int(self.k.nbytes + self.v.nbytes)
+        if self.k is None:
+            return self._released_nbytes
+        return int(self.k.nbytes + (self.v.nbytes if self.v is not None else 0))
+
+    def release_payload(self) -> None:
+        """Drop the RAM payload (the bytes now live down-tier)."""
+        self._released_nbytes = self.nbytes
+        self.k = None
+        self.v = None
+
+    def restore_payload(self, k: np.ndarray, v: np.ndarray, positions: np.ndarray) -> None:
+        self.k = np.asarray(k)
+        self.v = np.asarray(v)
+        self.positions = np.asarray(positions)
+        self._released_nbytes = 0
 
 
 class PoolExhausted(RuntimeError):
@@ -185,31 +200,5 @@ class BlockPool:
         return out
 
 
-class HostPool:
-    """Host-side (offload target) block store."""
-
-    def __init__(self) -> None:
-        self.blocks: Dict[int, KVBlock] = {}
-        self.by_chain: Dict[str, int] = {}
-
-    def put(self, blk: KVBlock) -> None:
-        blk.location = "host"
-        self.blocks[blk.block_id] = blk
-        self.by_chain[blk.chain] = blk.block_id
-
-    def pop(self, block_id: int) -> KVBlock:
-        blk = self.blocks.pop(block_id)
-        if self.by_chain.get(blk.chain) == block_id:
-            del self.by_chain[blk.chain]
-        return blk
-
-    def lookup_prefix(self, tokens: Sequence[int], block_size: int) -> List[KVBlock]:
-        out: List[KVBlock] = []
-        h = ""
-        for i in range(0, len(tokens) - len(tokens) % block_size, block_size):
-            h = chain_hash(h, tokens[i : i + block_size])
-            bid = self.by_chain.get(h)
-            if bid is None:
-                break
-            out.append(self.blocks[bid])
-        return out
+# The old single-tier ``HostPool`` was replaced by the tier hierarchy in
+# serving/tiers.py (HostTier / DiskTier / TieredStore).

@@ -1,25 +1,41 @@
-"""Offloading connector: store/load jobs, worker transfers, failure injection.
+"""Tiered transfer backend: store/load jobs, async worker, failure injection.
 
 Mirrors the shape of vLLM's OffloadingConnector (store/load job creation,
 worker transfer submission/completion, failed-load propagation) as described
-in the paper §7, implemented natively.  The connector moves REAL block
-payloads between the device pool and the host pool.
+in the paper §7, extended from the original device↔host pair to a tier
+hierarchy (device / host DRAM / disk — see serving/tiers.py):
 
-Failure injection semantics follow the paper exactly:
+  - stores target a named tier ("host" by default, "disk" to spill deep);
+  - a capacity-bounded host tier spills its oldest blocks down to disk
+    (``offload_tier_spill``) instead of dropping them — offloaded claim
+    bytes are never silently lost to tier pressure (fail-closed);
+  - loads restore from whichever tier holds the chain; a disk hit promotes
+    straight to the device pool (``offload_tier_promote``);
+  - every job's payload movement is batched through ONE ``kv_block_copy``
+    kernel gather on the async transfer queue (serving/transfer_queue.py)
+    instead of per-block copies.
+
+Failure injection semantics follow the paper, generalized to any tier
+boundary:
   - disabled unless the resident-claim load-failure flag is enabled;
-  - when enabled, the hook matches only host->device ("CPU -> GPU") loads;
-  - can filter by claim id;
-  - unclaimed generic failures require a separate flag.
+  - when enabled it matches restores into the device pool — any
+    ``*_to_device`` direction ("CPU -> GPU" in the paper's two-tier world);
+  - ``fail_tier_boundary`` pins the hook to one specific boundary instead
+    (e.g. "disk_to_device", "host_to_disk");
+  - can filter by claim id; unclaimed generic failures require a separate
+    flag.
 """
 from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Set
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
-from repro.serving.kv_cache import BlockPool, HostPool, KVBlock
+from repro.serving.kv_cache import BlockPool, KVBlock, chain_hash
+from repro.serving.tiers import DiskTier, HostTier, TieredStore
+from repro.serving.transfer_queue import TransferJob, TransferQueue
 
 
 @dataclass
@@ -27,10 +43,15 @@ class FailureInjectionConfig:
     resident_claim_load_failure: bool = False  # master flag (claim-scoped)
     fail_claim_id: Optional[str] = None  # filter: only this claim fails
     unclaimed_generic_failure: bool = False  # separate flag for unclaimed loads
+    fail_tier_boundary: Optional[str] = None  # pin to one boundary, e.g. "disk_to_device"
     failure_reason: str = "F0:injected_cpu_to_gpu_load_failure"
 
     def should_fail(self, direction: str, claim_ids: Set[str]) -> bool:
-        if direction != "host_to_device":
+        if self.fail_tier_boundary is not None:
+            if direction != self.fail_tier_boundary:
+                return False
+        elif not direction.endswith("_to_device"):
+            # default hook: restores into the device pool, any source tier
             return False
         if claim_ids:
             if not self.resident_claim_load_failure:
@@ -56,22 +77,31 @@ class OffloadJob:
     request_id: Optional[str]
     done: bool = False
     ok: bool = True
+    tier: str = "host"
 
 
 class OffloadingConnector:
-    """Device<->host block mover with ordered lifecycle events."""
+    """Tiered block mover with ordered lifecycle events and batched transfers."""
 
     def __init__(
         self,
         device_pool: BlockPool,
-        host_pool: HostPool,
-        event_log,
+        host_pool: Optional[HostTier] = None,
+        event_log=None,
         injection: Optional[FailureInjectionConfig] = None,
+        *,
+        disk_pool: Optional[DiskTier] = None,
+        queue: Optional[TransferQueue] = None,
     ):
+        from repro.core.events import EventLog
+
         self.device = device_pool
-        self.host = host_pool
-        self._events = event_log
+        self.host = host_pool if host_pool is not None else HostTier()
+        self.disk = disk_pool if disk_pool is not None else DiskTier()
+        self.tiers = TieredStore(self.host, self.disk)
+        self._events = event_log if event_log is not None else EventLog()
         self.injection = injection or FailureInjectionConfig()
+        self.queue = queue or TransferQueue()
         self._job_ids = itertools.count()
         self.jobs: Dict[int, OffloadJob] = {}
 
@@ -85,35 +115,67 @@ class OffloadingConnector:
         skip_blocks: int = 0,
         start_chain: str = "",
     ) -> List[KVBlock]:
-        """Host-side prefix lookup; emits offload_lookup_result (E1).
+        """Off-device prefix lookup across all tiers; emits offload_lookup_result (E1).
 
         ``skip_blocks``/``start_chain`` let the walk continue past a
         device-resident leading prefix.
         """
-        from repro.serving.kv_cache import chain_hash
-
         hit: List[KVBlock] = []
+        tier_hits: Dict[str, int] = {}
         h = start_chain
         nb = len(tokens) // block_size
         for i in range(skip_blocks, nb):
             h = chain_hash(h, tokens[i * block_size : (i + 1) * block_size])
-            bid = self.host.by_chain.get(h)
-            if bid is None:
+            blk = self.tiers.find_chain(h)
+            if blk is None:
                 break
-            hit.append(self.host.blocks[bid])
+            hit.append(blk)
+            tier_hits[blk.location] = tier_hits.get(blk.location, 0) + 1
         self._events.emit(
             "offload_lookup_result",
             request_id=request_id,
             hit_tokens=sum(len(b.tokens) for b in hit) + skip_blocks * block_size,
             hit_blocks=len(hit),
+            tier_hits=tier_hits,
         )
         return hit
 
-    # -- store (device -> host): offload ---------------------------------------
+    def lookup_chain(self, chain: str, request_id: str, n_tokens: int) -> Optional[KVBlock]:
+        """Exact-chain lookup (state-snapshot objects); emits E1."""
+        blk = self.tiers.find_chain(chain)
+        self._events.emit(
+            "offload_lookup_result",
+            request_id=request_id,
+            hit_tokens=n_tokens if blk is not None else 0,
+            hit_blocks=1 if blk is not None else 0,
+            tier_hits={blk.location: 1} if blk is not None else {},
+        )
+        return blk
+
+    def offloaded_lookup_prefix(self, tokens: Sequence[int], block_size: int) -> List[KVBlock]:
+        """Event-free prefix walk over off-device tiers (router overlap scoring)."""
+        out: List[KVBlock] = []
+        h = ""
+        for i in range(0, len(tokens) - len(tokens) % block_size, block_size):
+            h = chain_hash(h, tokens[i * block_size : (i + 1) * block_size])
+            blk = self.tiers.find_chain(h)
+            if blk is None:
+                break
+            out.append(blk)
+        return out
+
+    # -- store (device -> host|disk): offload -----------------------------------
     def store(
-        self, blocks: List[KVBlock], *, claim_id: Optional[str], request_id: Optional[str]
+        self,
+        blocks: List[KVBlock],
+        *,
+        claim_id: Optional[str],
+        request_id: Optional[str],
+        tier: str = "host",
     ) -> OffloadJob:
-        job = OffloadJob(next(self._job_ids), "store", [b.block_id for b in blocks], claim_id, request_id)
+        job = OffloadJob(
+            next(self._job_ids), "store", [b.block_id for b in blocks], claim_id, request_id, tier=tier
+        )
         self.jobs[job.job_id] = job
         self._events.emit(
             "offload_store_job_created",
@@ -121,15 +183,18 @@ class OffloadingConnector:
             claim_id=claim_id,
             job_id=job.job_id,
             block_ids=job.block_ids,
+            tier=tier,
         )
-        for blk in blocks:
-            res = self._worker_transfer(blk, "device_to_host", claim_id, request_id)
-            if not res.ok:  # store failures are not injected in this artifact
-                job.ok = False
-                continue
-            self.device.remove(blk.block_id, reason="offloaded")
-            self.host.put(blk)
-        job.done = True
+
+        def _run() -> None:
+            target = self.tiers.by_name(tier)
+            direction = f"device_to_{tier}"
+            self._transfer_blocks(blocks, direction, job, target_tier=target)
+            if self.host.over_capacity:
+                self._spill_overflow(job)
+            job.done = True
+
+        self._submit_and_join(job, _run)
         return job
 
     def complete_job(self, job: OffloadJob) -> None:
@@ -143,7 +208,7 @@ class OffloadingConnector:
             ok=job.ok,
         )
 
-    # -- load (host -> device): restore ------------------------------------------
+    # -- load (host|disk -> device): restore --------------------------------------
     def load(
         self,
         blocks: List[KVBlock],
@@ -152,7 +217,9 @@ class OffloadingConnector:
         request_id: Optional[str],
         protected_claims: Optional[Set[str]] = None,
     ) -> OffloadJob:
-        job = OffloadJob(next(self._job_ids), "load", [b.block_id for b in blocks], claim_id, request_id)
+        job = OffloadJob(
+            next(self._job_ids), "load", [b.block_id for b in blocks], claim_id, request_id
+        )
         self.jobs[job.job_id] = job
         self._events.emit(
             "offload_load_job_created",
@@ -161,35 +228,99 @@ class OffloadingConnector:
             job_id=job.job_id,
             block_ids=job.block_ids,
         )
-        for blk in blocks:
-            res = self._worker_transfer(blk, "host_to_device", claim_id, request_id)
-            if not res.ok:
-                job.ok = False
-                self._events.emit(
-                    "offload_worker_load_failed",
-                    request_id=request_id,
-                    claim_id=claim_id,
-                    block_id=blk.block_id,
-                    reason=res.reason,
-                )
-                # failed bytes never reach the device pool — the KV is absent
-                continue
-            moved = self.host.pop(blk.block_id)
-            moved.location = "device"
-            if self.device.free_slots <= 0:
-                self.device.evict(1, protected_claims=protected_claims or set())
-            self.device.blocks[moved.block_id] = moved
-            self.device.prefix_index[moved.chain] = moved.block_id
-            self._events.emit(
-                "block_stored", block_id=moved.block_id, chain=moved.chain, n_tokens=len(moved.tokens)
-            )
-        job.done = True
+
+        def _run() -> None:
+            survivors: List[Tuple[KVBlock, str]] = []
+            for blk in blocks:
+                src = self.tiers.tier_of_block(blk.block_id)
+                src_name = src.name if src is not None else "host"
+                direction = f"{src_name}_to_device"
+                res = self._worker_submit(blk, direction, job.claim_id, job.request_id)
+                if not res.ok:
+                    job.ok = False
+                    self._events.emit(
+                        "offload_worker_transfer_finished",
+                        request_id=job.request_id,
+                        claim_id=job.claim_id,
+                        block_id=blk.block_id,
+                        direction=direction,
+                        ok=False,
+                        reason=res.reason,
+                    )
+                    self._events.emit(
+                        "offload_worker_load_failed",
+                        request_id=job.request_id,
+                        claim_id=job.claim_id,
+                        block_id=blk.block_id,
+                        reason=res.reason,
+                    )
+                    # failed bytes never reach the device pool — the KV is absent
+                    continue
+                survivors.append((blk, src_name))
+
+            if survivors:
+                # pop from source tiers (a disk pop re-reads the spilled
+                # bytes), then move every payload in ONE batched gather
+                popped = []
+                for blk, src_name in survivors:
+                    tier = self.tiers.by_name(src_name)
+                    popped.append((tier.pop(blk.block_id), src_name))
+                self._batched_copy([b for b, _ in popped], job)
+                for blk, src_name in popped:
+                    direction = f"{src_name}_to_device"
+                    if src_name != "host":
+                        self._events.emit(
+                            "offload_tier_promote",
+                            claim_id=job.claim_id,
+                            block_id=blk.block_id,
+                            from_tier=src_name,
+                            to_tier="device",
+                        )
+                    blk.location = "device"
+                    if self.device.free_slots <= 0:
+                        self.device.evict(1, protected_claims=protected_claims or set())
+                    self.device.blocks[blk.block_id] = blk
+                    self.device.prefix_index[blk.chain] = blk.block_id
+                    self._events.emit(
+                        "offload_worker_transfer_finished",
+                        request_id=job.request_id,
+                        claim_id=job.claim_id,
+                        block_id=blk.block_id,
+                        direction=direction,
+                        ok=True,
+                        reason="",
+                    )
+                    self._events.emit(
+                        "block_stored",
+                        block_id=blk.block_id,
+                        chain=blk.chain,
+                        n_tokens=len(blk.tokens),
+                    )
+            job.done = True
+
+        self._submit_and_join(job, _run)
         return job
 
-    # -- worker ---------------------------------------------------------------------
-    def _worker_transfer(
+    # -- worker internals ---------------------------------------------------------
+    def _submit_and_join(self, job: OffloadJob, fn) -> None:
+        """Enqueue on the async worker and join before returning: the engine's
+        next event must be ordered after every transfer event of this job."""
+        self._events.emit(
+            "transfer_job_enqueued",
+            request_id=job.request_id,
+            claim_id=job.claim_id,
+            job_id=job.job_id,
+            kind=job.kind,
+            n_blocks=len(job.block_ids),
+        )
+        tjob = TransferJob(job.job_id, job.kind, fn)
+        self.queue.submit(tjob)
+        tjob.wait()
+
+    def _worker_submit(
         self, blk: KVBlock, direction: str, claim_id: Optional[str], request_id: Optional[str]
     ) -> TransferResult:
+        """Emit the per-block submission event (E3) and decide injection."""
         self._events.emit(
             "offload_worker_transfer_submitted",
             request_id=request_id,
@@ -200,19 +331,90 @@ class OffloadingConnector:
         )
         claim_ids = set(blk.claim_ids) | ({claim_id} if claim_id else set())
         if self.injection.should_fail(direction, claim_ids):
-            res = TransferResult(False, self.injection.failure_reason)
-        else:
-            # the actual byte movement: payloads are copied between pools
-            blk.k = np.array(blk.k, copy=True)
-            blk.v = np.array(blk.v, copy=True)
-            res = TransferResult(True)
-        self._events.emit(
-            "offload_worker_transfer_finished",
-            request_id=request_id,
-            claim_id=claim_id,
-            block_id=blk.block_id,
-            direction=direction,
-            ok=res.ok,
-            reason=res.reason,
-        )
-        return res
+            return TransferResult(False, self.injection.failure_reason)
+        return TransferResult(True)
+
+    def _batched_copy(self, blocks: List[KVBlock], job: OffloadJob) -> None:
+        """Materialize fresh payload buffers for a job's surviving blocks via
+        one batched kernel gather (the restoration hot path)."""
+        from repro.kernels.kv_block_copy import gather_payloads
+
+        with_payload = [b for b in blocks if b.k is not None and np.asarray(b.k).size > 0]
+        if with_payload:
+            new_k = gather_payloads([b.k for b in with_payload])
+            for blk, nk in zip(with_payload, new_k):
+                blk.k = nk
+            with_v = [b for b in with_payload if b.v is not None and np.asarray(b.v).size > 0]
+            if with_v:
+                new_v = gather_payloads([b.v for b in with_v])
+                for blk, nv in zip(with_v, new_v):
+                    blk.v = nv
+        if len(blocks) > 0:
+            self._events.emit(
+                "transfer_batch_executed",
+                claim_id=job.claim_id,
+                request_id=job.request_id,
+                job_id=job.job_id,
+                n_blocks=len(blocks),
+                nbytes=sum(b.nbytes for b in blocks),
+            )
+
+    def _transfer_blocks(self, blocks: List[KVBlock], direction: str, job: OffloadJob, *, target_tier) -> List[KVBlock]:
+        """Store-side per-block transfer: E3/E4 events, injection, batched copy,
+        then the pool moves.  Returns the blocks that actually moved."""
+        survivors: List[KVBlock] = []
+        results: List[TransferResult] = []
+        for blk in blocks:
+            res = self._worker_submit(blk, direction, job.claim_id, job.request_id)
+            results.append(res)
+            if res.ok:
+                survivors.append(blk)
+            else:
+                job.ok = False
+        self._batched_copy(survivors, job)
+        for blk, res in zip(blocks, results):
+            self._events.emit(
+                "offload_worker_transfer_finished",
+                request_id=job.request_id,
+                claim_id=job.claim_id,
+                block_id=blk.block_id,
+                direction=direction,
+                ok=res.ok,
+                reason=res.reason,
+            )
+            if res.ok:
+                if blk.block_id in self.device.blocks:
+                    self.device.remove(blk.block_id, reason="offloaded")
+                target_tier.put(blk)
+        return survivors
+
+    # -- spill policy (host overflow -> disk) -------------------------------------
+    def _spill_overflow(self, job: OffloadJob) -> None:
+        """Demote the host tier's oldest blocks to disk until within capacity.
+
+        A spill failure is fail-closed for the block: it stays resident in
+        the host tier (over capacity) rather than being dropped.
+        """
+        for blk in self.tiers.spill_candidates():
+            res = self._worker_submit(blk, "host_to_disk", job.claim_id, job.request_id)
+            self._events.emit(
+                "offload_worker_transfer_finished",
+                request_id=job.request_id,
+                claim_id=job.claim_id,
+                block_id=blk.block_id,
+                direction="host_to_disk",
+                ok=res.ok,
+                reason=res.reason,
+            )
+            if not res.ok:
+                continue
+            moved = self.host.pop(blk.block_id)
+            self.disk.put(moved)
+            self._events.emit(
+                "offload_tier_spill",
+                claim_id=sorted(moved.claim_ids)[0] if moved.claim_ids else None,
+                block_id=moved.block_id,
+                from_tier="host",
+                to_tier="disk",
+                nbytes=moved.nbytes,
+            )

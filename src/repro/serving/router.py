@@ -57,9 +57,15 @@ class KVAwareRouter:
 
     # -- routing -----------------------------------------------------------------
     def _overlap(self, engine: ServingEngine, tokens: Tuple[int, ...]) -> int:
+        """Reusable-token overlap on a worker, across ALL storage tiers
+        (device pool first, then the host/disk hierarchy)."""
         dev = engine.pool.lookup_prefix(tokens, engine.block_size)
-        host = engine.host.lookup_prefix(tokens, engine.block_size) if not dev else []
-        return sum(len(b.tokens) for b in dev) + sum(len(b.tokens) for b in host)
+        off = (
+            engine.connector.offloaded_lookup_prefix(tokens, engine.block_size)
+            if not dev
+            else []
+        )
+        return sum(len(b.tokens) for b in dev) + sum(len(b.tokens) for b in off)
 
     def _claim_for(self, tokens: Tuple[int, ...]) -> Optional[str]:
         for cid, prefix in self._claim_prefix.items():

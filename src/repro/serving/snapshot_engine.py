@@ -3,40 +3,35 @@
 DESIGN.md §4: for attention-free and hybrid architectures the reusable
 cache object is not a KV block chain but a *state snapshot* — the full
 recurrent state (mLSTM (C, n, m) matrices, SSM (h, conv) state, hybrid
-window-KV + state pair) after consuming a token prefix. The ResidentClaim
+window-KV + state pair) after consuming a token prefix.  The ResidentClaim
 contract binds identically: identity, acceptance, predicate
 (``state_at_token(k)``), ordered lifecycle, restore-before-reuse, and the
 fail-closed scheduler outcome on same-claim restoration failure.
 
-Implementation note: a snapshot travels through the SAME offloading
-connector as KV blocks — it is packed as a single pseudo-block whose
-payload is the flattened state bytes, so transfer events (E2–E4, E7, E11),
-failure injection, and the scheduler invalid-load boundary (E12–E14) are
-literally the same code paths the KV witness exercises.  A restored
-snapshot is bit-identical state: greedy decode after restore matches the
-never-offloaded run (tests/test_snapshot_claims.py).
+Implementation note: the lifecycle is not merely "the same shape" as the KV
+engine's — it is literally the same code.  ``SnapshotEngine`` subclasses
+``core_engine.EngineCore`` with ``kind = StateSnapshotKind()`` and supplies
+only the snapshot-specific plumbing: packing a state pytree into a single
+pseudo-block whose payload is the flattened state bytes, and unpacking it
+on reuse.  Transfers ride the SAME tiered connector (host + disk spill),
+the SAME async batched job queue, the SAME failure injection, and the SAME
+scheduler invalid-load boundary (E12–E14) the KV witness exercises.  A
+restored snapshot is bit-identical state: greedy decode after restore
+matches the never-offloaded run (tests/test_snapshot_claims.py).
 """
 from __future__ import annotations
 
-import itertools
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.claims import (
-    CacheIdentity,
-    ClaimMode,
-    ClaimRegistry,
-    ClaimState,
-    MaterializationPredicate,
-    ResidentClaim,
-)
-from repro.core.events import EventLog
-from repro.serving.engine import Request, Scheduler, _jitted_steps
-from repro.serving.kv_cache import BlockPool, HostPool, KVBlock, prefix_object_id
-from repro.serving.offload import FailureInjectionConfig, OffloadingConnector
+from repro.core.claims import ClaimMode, ClaimState, ResidentClaim
+from repro.serving.cache_object import StateSnapshotKind
+from repro.serving.core_engine import EngineCore, Request
+from repro.serving.kv_cache import KVBlock
+from repro.serving.offload import FailureInjectionConfig
 
 
 def _pack_state(state) -> Tuple[np.ndarray, list]:
@@ -60,8 +55,10 @@ def _unpack_state(payload: np.ndarray, meta):
     return jax.tree.unflatten(treedef, [jnp.asarray(l) for l in leaves])
 
 
-class SnapshotEngine:
+class SnapshotEngine(EngineCore):
     """Claim-native serving over recurrent-state snapshots."""
+
+    kind = StateSnapshotKind()
 
     def __init__(
         self,
@@ -69,55 +66,42 @@ class SnapshotEngine:
         params,
         *,
         device_slots: int = 16,
-        event_log: Optional[EventLog] = None,
+        event_log=None,
         injection: Optional[FailureInjectionConfig] = None,
+        host_blocks: Optional[int] = None,
+        disk_dir=None,
     ):
-        self.bundle = bundle
-        self.cfg = bundle.cfg
-        self.params = params
-        self.events = event_log or EventLog()
-        self.identity = CacheIdentity(
-            model=self.cfg.name, tokenizer_hash="synthetic-tokenizer-v1", block_size=1
-        )
-        self.registry = ClaimRegistry(self.events, self.identity)
-        self.pool = BlockPool(device_slots, self.events)
-        self.host = HostPool()
-        self.connector = OffloadingConnector(self.pool, self.host, self.events, injection)
-        self.scheduler = Scheduler(self.registry, self.pool, self.events)
-        self._req_ids = itertools.count()
-        self._claim_prefixes: Dict[str, Tuple[int, ...]] = {}
-        self._snapshot_meta: Dict[str, object] = {}  # chain -> reconstruction spec
         # hybrid archs carry a window-KV half alongside the state
-        cache_len = self.cfg.sliding_window or 1
-        self._jit_prefill, self._jit_decode = _jitted_steps(bundle, cache_len)
+        super().__init__(
+            bundle,
+            params,
+            block_size=1,
+            device_blocks=device_slots,
+            cache_len=bundle.cfg.sliding_window or 1,
+            event_log=event_log,
+            injection=injection,
+            host_blocks=host_blocks,
+            disk_dir=disk_dir,
+        )
+        self._snapshot_meta: Dict[str, object] = {}  # chain -> reconstruction spec
 
     # -- claims -------------------------------------------------------------
-    def accept_claim(self, prefix_tokens: Sequence[int], mode: ClaimMode, **kw) -> ResidentClaim:
-        prefix = tuple(int(t) for t in prefix_tokens)
-        claim = self.registry.accept(
-            prefix_object_id(prefix, 1),
-            MaterializationPredicate("state_at_token", len(prefix)),
-            mode,
-            **kw,
-        )
-        self._claim_prefixes[claim.claim_id] = prefix
-        return claim
-
     def _chain_for(self, prefix: Tuple[int, ...]) -> str:
-        return prefix_object_id(prefix, 1)
+        return self.kind.object_id(prefix, self.block_size)
+
+    def _claim_device_blocks(self, claim: ResidentClaim):
+        chain = self._chain_for(self._claim_prefixes[claim.claim_id])
+        bid = self.pool.prefix_index.get(chain)
+        if bid is None:
+            return None
+        return [self.pool.blocks[bid]]
 
     # -- materialization -----------------------------------------------------
     def materialize_claim(self, claim_id: str) -> KVBlock:
         """Prefill the claim prefix and snapshot the recurrent state."""
         claim = self.registry.get(claim_id)
         prefix = self._claim_prefixes[claim_id]
-        req = Request(f"req-{next(self._req_ids):04d}", prefix, 0)
-        self.events.emit(
-            "request_initialized",
-            request_id=req.request_id,
-            n_tokens=len(prefix),
-            claim_metadata=[claim_id],
-        )
+        req = self._new_request(prefix, 0)
         logits, state = self._jit_prefill(
             self.params, {"tokens": jnp.asarray([prefix], jnp.int32)}
         )
@@ -131,116 +115,47 @@ class SnapshotEngine:
             prefix, chain, payload, np.zeros(0, np.uint8), np.arange(len(prefix)),
             claim_ids={claim_id},
         )
-        claim.footprint_bytes = blk.nbytes
-        self.registry.mark(
+        self._materialize_claim(
             claim,
-            ClaimState.MATERIALIZED,
-            "claim_materialized",
-            predicate=claim.predicate.name,
-            observation_point="state_snapshot",
             materialized_tokens=len(prefix),
+            n_blocks=1,
+            footprint_bytes=blk.nbytes,
             request_id=req.request_id,
         )
-        self.events.emit(
-            "claim_footprint_accounted",
-            claim_id=claim_id,
-            footprint_bytes=claim.footprint_bytes,
-            n_blocks=1,
-        )
-        self.events.emit(
-            "offload_request_finished_no_pending_jobs", request_id=req.request_id
-        )
-        self.events.emit("request_finished", request_id=req.request_id, status="FINISHED_OK")
+        self._finish_ok(req)
         return blk
-
-    # -- offload / restore ----------------------------------------------------
-    def offload_claim(self, claim_id: str, request_id: Optional[str] = None) -> bool:
-        claim = self.registry.get(claim_id)
-        chain = self._chain_for(self._claim_prefixes[claim_id])
-        bid = self.pool.prefix_index.get(chain)
-        if bid is None:
-            return False
-        job = self.connector.store([self.pool.blocks[bid]], claim_id=claim_id, request_id=request_id)
-        if job.ok:
-            self.registry.mark(
-                claim, ClaimState.OFFLOADED, "resident_claim_offloaded",
-                n_blocks=1, request_id=request_id,
-            )
-        self.connector.complete_job(job)
-        return job.ok
 
     # -- serve ------------------------------------------------------------------
     def serve(self, tokens: Sequence[int], max_new_tokens: int = 2) -> Request:
         """Serve a request whose prefix may hit a snapshot claim."""
         toks = tuple(int(t) for t in tokens)
-        req = Request(f"req-{next(self._req_ids):04d}", toks, max_new_tokens)
-        claims = [
-            c for c in self.registry.active_claims()
-            if toks[: len(self._claim_prefixes.get(c.claim_id, (None,)))]
-            == self._claim_prefixes.get(c.claim_id)
-        ]
-        self.events.emit(
-            "request_initialized",
-            request_id=req.request_id,
-            n_tokens=len(toks),
-            claim_metadata=sorted(c.claim_id for c in claims),
-        )
+        req = self._new_request(toks, max_new_tokens)
+        claims = self._matching_claims(toks)
 
         state = None
+        logits = None
         consumed = 0
         if claims:
             claim = claims[0]
             prefix = self._claim_prefixes[claim.claim_id]
             chain = self._chain_for(prefix)
             dev_bid = self.pool.prefix_index.get(chain)
-            host_bid = self.host.by_chain.get(chain)
-            if dev_bid is None and host_bid is not None:
-                self.events.emit(
-                    "offload_lookup_result",
-                    request_id=req.request_id,
-                    hit_tokens=len(prefix),
-                    hit_blocks=1,
-                )
-                if claim.state == ClaimState.OFFLOADED:
-                    self.registry.mark(
-                        claim, ClaimState.RESTORE_REQUIRED,
-                        "resident_claim_restore_required",
-                        request_id=req.request_id, predicate=claim.predicate.name,
-                    )
-                job = self.connector.load(
-                    [self.host.blocks[host_bid]],
-                    claim_id=claim.claim_id,
-                    request_id=req.request_id,
-                    protected_claims=self.scheduler.protected_claim_ids(),
-                )
-                if not job.ok:
-                    # fail-closed scheduler boundary — identical to the KV path
-                    outcome = self.scheduler.on_invalid_kv_load(
-                        req, [claim], reason=self.connector.injection.failure_reason
-                    )
-                    req.status = "refused"
-                    req.error = outcome.reason
-                    self.events.emit(
-                        "offload_request_finished_pending_jobs",
-                        request_id=req.request_id, job_id=job.job_id,
-                    )
-                    self.events.emit(
-                        "request_finished", request_id=req.request_id, status="FINISHED_ERROR"
-                    )
-                    return req
-                self.registry.mark(
-                    claim, ClaimState.RESTORED, "resident_claim_restored",
-                    request_id=req.request_id,
-                )
-                self.connector.complete_job(job)
-                dev_bid = self.pool.prefix_index.get(chain)
+            if dev_bid is None:
+                hit = self.connector.lookup_chain(chain, req.request_id, len(prefix))
+                if hit is not None:
+                    # THE shared restore-before-reuse boundary (EngineCore):
+                    # restore_required -> load -> restored, or the fail-closed
+                    # scheduler outcome — identical code to the KV path.
+                    restore_claims = [claim] if claim.state == ClaimState.OFFLOADED else []
+                    if not self._restore_for_request(req, [hit], restore_claims):
+                        return req
+                    dev_bid = self.pool.prefix_index.get(chain)
             if dev_bid is not None:
                 blk = self.pool.blocks[dev_bid]
                 snap = _unpack_state(blk.k, self._snapshot_meta[chain])
                 state, logits = snap["state"], snap["logits"][0]
                 consumed = len(prefix)
                 req.cached_tokens = consumed
-                req.restored_tokens = consumed if claim.state == ClaimState.RESTORED else 0
 
         # prefill any uncached part / decode from the (restored) state
         if state is None:
@@ -264,7 +179,4 @@ class SnapshotEngine:
             )
             logits = lg[0]
             pos += 1
-        req.status = "finished"
-        self.events.emit("offload_request_finished_no_pending_jobs", request_id=req.request_id)
-        self.events.emit("request_finished", request_id=req.request_id, status="FINISHED_OK")
-        return req
+        return self._finish_ok(req)

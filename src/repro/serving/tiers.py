@@ -1,0 +1,201 @@
+"""Storage tiers behind the transfer backend: host DRAM and disk spill.
+
+The device pool (``kv_cache.BlockPool``) is tier 0; this module supplies the
+off-device tiers and the policy glue between them:
+
+  - ``HostTier``  — CPU DRAM block store (the paper's "CPU" offload target),
+    optionally capacity-bounded.  When full, the least-recently-stored block
+    spills to the next tier instead of being dropped (fail-closed: offloaded
+    claim bytes are never silently lost by tier pressure).
+  - ``DiskTier``  — file-backed spill tier.  Payloads are serialized to an
+    ``.npz`` per block and the in-memory arrays are released; a disk-resident
+    block genuinely holds no RAM payload, so a restore really re-reads bytes.
+  - ``TieredStore`` — ordered [host, disk] view with chain lookup across
+    tiers, the spill policy, and promotion bookkeeping.
+
+Every tier exposes the same minimal surface (``blocks``, ``by_chain``,
+``put``, ``pop``) so the connector can treat a transfer between any two
+tiers uniformly — which is what lets failure injection work at every tier
+boundary (see offload.FailureInjectionConfig).  Chain lookups go through
+``TieredStore.find_chain`` (and the connector's prefix walks on top of it).
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.kv_cache import KVBlock
+
+
+class HostTier:
+    """Host-side (CPU DRAM) block store.  Drop-in for the old ``HostPool``."""
+
+    name = "host"
+
+    def __init__(self, capacity_blocks: Optional[int] = None) -> None:
+        self.capacity = capacity_blocks  # None = unbounded
+        self.blocks: Dict[int, KVBlock] = {}
+        self.by_chain: Dict[str, int] = {}
+        self._order: List[int] = []  # insertion order, oldest first (spill victims)
+
+    @property
+    def used(self) -> int:
+        return len(self.blocks)
+
+    @property
+    def over_capacity(self) -> bool:
+        return self.capacity is not None and self.used > self.capacity
+
+    def put(self, blk: KVBlock) -> None:
+        blk.location = self.name
+        self.blocks[blk.block_id] = blk
+        self.by_chain[blk.chain] = blk.block_id
+        self._order.append(blk.block_id)
+
+    def pop(self, block_id: int) -> KVBlock:
+        blk = self.blocks.pop(block_id)
+        if self.by_chain.get(blk.chain) == block_id:
+            del self.by_chain[blk.chain]
+        if block_id in self._order:
+            self._order.remove(block_id)
+        return blk
+
+    def spill_victim(self) -> Optional[KVBlock]:
+        """Oldest resident block — the candidate to push down-tier."""
+        return self.blocks[self._order[0]] if self._order else None
+
+
+class DiskTier:
+    """File-backed spill tier: block payloads live in per-block ``.npz`` files.
+
+    The in-memory ``KVBlock`` keeps only metadata while disk-resident — its
+    ``k``/``v`` arrays are released on ``put`` and re-read on ``pop``, so
+    disk residency is real byte movement, not a flag.
+    """
+
+    name = "disk"
+
+    def __init__(self, spill_dir: Optional[Path] = None) -> None:
+        # Directory creation is lazy: benches spin up hundreds of engines
+        # and most never touch disk.
+        self._spill_dir = spill_dir
+        self._tmp: Optional[str] = None
+        self.dir: Optional[Path] = None
+        self.blocks: Dict[int, KVBlock] = {}
+        self.by_chain: Dict[str, int] = {}
+        self._files: Dict[int, Path] = {}
+        self.bytes_written = 0
+        self.bytes_read = 0
+
+    def _ensure_dir(self) -> Path:
+        if self.dir is None:
+            if self._spill_dir is None:
+                self._tmp = tempfile.mkdtemp(prefix="repro-kv-disk-")
+                self.dir = Path(self._tmp)
+            else:
+                self.dir = Path(self._spill_dir)
+                self.dir.mkdir(parents=True, exist_ok=True)
+        return self.dir
+
+    def __del__(self):  # pragma: no cover - best-effort cleanup
+        if self._tmp:
+            shutil.rmtree(self._tmp, ignore_errors=True)
+
+    @property
+    def used(self) -> int:
+        return len(self.blocks)
+
+    @staticmethod
+    def _encode(a: np.ndarray):
+        """Raw-bytes encoding: ``np.savez`` cannot round-trip extended dtypes
+        (ml_dtypes bfloat16 degrades to void), so payloads are stored as a
+        uint8 buffer + (dtype, shape) sidecar."""
+        a = np.ascontiguousarray(np.asarray(a))
+        return a.view(np.uint8).reshape(-1), str(a.dtype), a.shape
+
+    @staticmethod
+    def _decode(buf: np.ndarray, dtype: str, shape) -> np.ndarray:
+        if dtype.startswith("bfloat16"):
+            import ml_dtypes
+
+            dt = np.dtype(ml_dtypes.bfloat16)
+        else:
+            dt = np.dtype(dtype)
+        return buf.view(dt).reshape(tuple(int(s) for s in shape))
+
+    def put(self, blk: KVBlock) -> None:
+        path = self._ensure_dir() / f"blk-{blk.block_id:06d}-{blk.chain}.npz"
+        k_buf, k_dt, k_shape = self._encode(blk.k)
+        v_buf, v_dt, v_shape = self._encode(blk.v)
+        np.savez(
+            path,
+            k=k_buf, k_dtype=k_dt, k_shape=np.asarray(k_shape, np.int64),
+            v=v_buf, v_dtype=v_dt, v_shape=np.asarray(v_shape, np.int64),
+            positions=np.asarray(blk.positions),
+        )
+        self.bytes_written += blk.nbytes
+        blk.release_payload()  # record nbytes, drop the RAM arrays
+        blk.location = self.name
+        self.blocks[blk.block_id] = blk
+        self.by_chain[blk.chain] = blk.block_id
+        self._files[blk.block_id] = path
+
+    def pop(self, block_id: int) -> KVBlock:
+        blk = self.blocks.pop(block_id)
+        if self.by_chain.get(blk.chain) == block_id:
+            del self.by_chain[blk.chain]
+        path = self._files.pop(block_id)
+        with np.load(path) as payload:
+            blk.restore_payload(
+                self._decode(payload["k"], str(payload["k_dtype"]), payload["k_shape"]),
+                self._decode(payload["v"], str(payload["v_dtype"]), payload["v_shape"]),
+                payload["positions"],
+            )
+        self.bytes_read += blk.nbytes
+        path.unlink(missing_ok=True)
+        return blk
+
+
+class TieredStore:
+    """Ordered off-device tier hierarchy (host, then disk).
+
+    Chain lookups fall through tier by tier; the spill policy keeps the host
+    tier within capacity by demoting its oldest blocks down-tier.  Actual
+    transfers (with events + injection) run through the connector — this
+    class only answers "where does chain X live" and "who should spill".
+    """
+
+    def __init__(self, host: HostTier, disk: DiskTier) -> None:
+        self.host = host
+        self.disk = disk
+        self.tiers: Tuple = (host, disk)
+
+    def tier_of_block(self, block_id: int):
+        for tier in self.tiers:
+            if block_id in tier.blocks:
+                return tier
+        return None
+
+    def find_chain(self, chain: str) -> Optional[KVBlock]:
+        for tier in self.tiers:
+            bid = tier.by_chain.get(chain)
+            if bid is not None:
+                return tier.blocks[bid]
+        return None
+
+    def by_name(self, name: str):
+        for tier in self.tiers:
+            if tier.name == name:
+                return tier
+        raise KeyError(f"unknown tier {name!r}")
+
+    def spill_candidates(self) -> List[KVBlock]:
+        """Host blocks that must move down-tier to restore capacity (oldest first)."""
+        if self.host.capacity is None or self.host.used <= self.host.capacity:
+            return []
+        n = self.host.used - self.host.capacity
+        return [self.host.blocks[bid] for bid in self.host._order[:n]]

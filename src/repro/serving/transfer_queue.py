@@ -1,0 +1,81 @@
+"""Async transfer job queue: ordered execution, batched payload movement.
+
+The connector no longer moves bytes inline on the engine thread.  Each
+store/load becomes a ``TransferJob`` enqueued on a single background worker,
+which (a) preserves the total event order the analyzer checks — jobs execute
+strictly FIFO and the engine joins a job before emitting the claim-lifecycle
+event that must follow it — and (b) batches every multi-block job's payload
+movement through one ``kv_block_copy`` kernel gather instead of per-block
+copies (kernels/kv_block_copy.gather_payloads).
+
+The queue is deliberately small: determinism is a correctness property here
+(witness paths are ordered sequences), so the only concurrency is
+engine-thread vs worker-thread with explicit joins at lifecycle boundaries.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+
+@dataclass
+class TransferJob:
+    """Handle for an enqueued transfer; ``wait()`` joins its completion."""
+
+    job_id: int
+    kind: str  # "store" | "load" | "spill"
+    fn: Callable[[], None] = field(repr=False, default=None)
+    _done: threading.Event = field(default_factory=threading.Event, repr=False)
+    error: Optional[BaseException] = None
+
+    def wait(self, timeout: Optional[float] = None) -> None:
+        self._done.wait(timeout)
+        if self.error is not None:
+            raise self.error
+
+    @property
+    def finished(self) -> bool:
+        return self._done.is_set()
+
+
+class TransferQueue:
+    """FIFO background worker executing transfer jobs in submission order."""
+
+    def __init__(self) -> None:
+        self._q: "queue.Queue[Optional[TransferJob]]" = queue.Queue()
+        self._worker: Optional[threading.Thread] = None
+        self._lock = threading.Lock()
+        self.executed_jobs = 0
+
+    def _ensure_worker(self) -> None:
+        with self._lock:
+            if self._worker is None or not self._worker.is_alive():
+                self._worker = threading.Thread(
+                    target=self._run, name="kv-transfer-worker", daemon=True
+                )
+                self._worker.start()
+
+    def _run(self) -> None:
+        while True:
+            job = self._q.get()
+            if job is None:
+                return
+            try:
+                job.fn()
+            except BaseException as e:  # propagate to the joining engine thread
+                job.error = e
+            finally:
+                self.executed_jobs += 1
+                job._done.set()
+                self._q.task_done()
+
+    def submit(self, job: TransferJob) -> TransferJob:
+        self._ensure_worker()
+        self._q.put(job)
+        return job
+
+    def flush(self) -> None:
+        """Join all currently queued jobs."""
+        self._q.join()

@@ -1,0 +1,291 @@
+"""One lifecycle, every object kind, every tier boundary.
+
+The refactor's decisive property: KV block chains and state snapshots are
+two ``CacheObjectKind`` implementations over ONE shared claim lifecycle
+(serving/core_engine.EngineCore), and the transfer backend is a tier
+hierarchy (host DRAM + disk spill) with failure injection at every
+boundary.  This suite runs the SAME fail-closed ordering scenario —
+
+  accept -> materialize -> offload(tier) -> reuse -> restore_required ->
+  same-claim load failure at the tier boundary ->
+  E11 -> E12 -> E13(blocking_claim_ids=[C]) -> E14 -> terminal
+
+— parametrized over both object kinds and both restore-source tiers, plus
+the success path (witness path A) over the same matrix, spill/promotion,
+and claim-scoped isolation inside a continuously-batched step.
+"""
+import jax
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.analyzer import (
+    check_failure_outcome_path,
+    check_observation_path,
+    validate_event_sequence,
+)
+from repro.core.claims import ClaimMode, ClaimState
+from repro.models.registry import build_model
+from repro.serving.engine import ServingEngine
+from repro.serving.offload import FailureInjectionConfig
+from repro.serving.snapshot_engine import SnapshotEngine
+
+
+# ---------------------------------------------------------------------------
+# kind harnesses: the ONLY kind-specific code in this suite — everything the
+# scenarios assert below is shared-lifecycle behavior.
+# ---------------------------------------------------------------------------
+
+
+class KVHarness:
+    kind = "kv_chain"
+    prefix = tuple(range(10, 26))  # 16 tokens = 4 blocks of 4
+
+    def __init__(self):
+        cfg = reduced(get_config("qwen3-1.7b"))
+        self.bundle = build_model(cfg)
+        self.params = self.bundle.init_params(jax.random.PRNGKey(0))
+
+    def make_engine(self, **kw):
+        kw.setdefault("block_size", 4)
+        kw.setdefault("device_blocks", 64)
+        kw.setdefault("cache_len", 64)
+        return ServingEngine(self.bundle, self.params, **kw)
+
+    def materialize(self, eng, claim):
+        req = eng.submit(self.prefix + (30, 31), max_new_tokens=1)
+        eng.run(req)
+        return req
+
+    def reuse(self, eng, extra=(40, 41), max_new_tokens=2):
+        req = eng.submit(self.prefix + extra, max_new_tokens=max_new_tokens)
+        eng.run(req)
+        return req
+
+
+class SnapshotHarness:
+    kind = "state_snapshot"
+    prefix = tuple(range(10, 22))
+
+    def __init__(self):
+        cfg = reduced(get_config("xlstm-350m"))
+        self.bundle = build_model(cfg)
+        self.params = self.bundle.init_params(jax.random.PRNGKey(0))
+
+    def make_engine(self, **kw):
+        kw.pop("device_blocks", None)
+        return SnapshotEngine(self.bundle, self.params, **kw)
+
+    def materialize(self, eng, claim):
+        eng.materialize_claim(claim.claim_id)
+        return None
+
+    def reuse(self, eng, extra=(40, 41), max_new_tokens=2):
+        return eng.serve(self.prefix + extra, max_new_tokens=max_new_tokens)
+
+
+@pytest.fixture(scope="module", params=["kv_chain", "state_snapshot"])
+def harness(request):
+    return KVHarness() if request.param == "kv_chain" else SnapshotHarness()
+
+
+TIERS = ["host", "disk"]
+
+
+# ---------------------------------------------------------------------------
+# the same fail-closed ordering scenario over kinds x tiers
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("tier", TIERS)
+def test_same_claim_restore_failure_fail_closed(harness, tier):
+    """Same-claim restore failure at the {tier}->device boundary produces the
+    claim-scoped, ordered, fail-closed refusal — identically for both kinds."""
+    eng = harness.make_engine()
+    claim = eng.accept_claim(harness.prefix, ClaimMode.OFFLOADABLE)
+    harness.materialize(eng, claim)
+    assert claim.state == ClaimState.MATERIALIZED
+    assert eng.offload_claim(claim.claim_id, tier=tier)
+    assert claim.state == ClaimState.OFFLOADED
+    # tier residency is real: a disk offload leaves nothing in host DRAM
+    if tier == "disk":
+        assert eng.disk.used > 0 and eng.host.used == 0
+        assert all(b.k is None for b in eng.disk.blocks.values())
+
+    eng.connector.injection.resident_claim_load_failure = True
+    eng.connector.injection.fail_claim_id = claim.claim_id
+
+    req = harness.reuse(eng)
+    assert req.status == "refused"
+    assert req.output_tokens == []  # fail-closed: no fallback recompute
+    assert claim.state == ClaimState.RESTORATION_FAILED
+    assert validate_event_sequence(eng.events).passed
+    v = check_failure_outcome_path(eng.events, claim.claim_id, req.request_id, source_tier=tier)
+    assert v.passed, v.reasons
+    e13 = eng.events.named("scheduler_active_request_refused")[0]
+    assert e13.payload["blocking_claim_ids"] == [claim.claim_id]
+
+
+@pytest.mark.parametrize("tier", TIERS)
+def test_observation_path_over_tiers(harness, tier):
+    """Witness path A holds when the claim restores from either tier, and the
+    restored bytes reproduce the never-offloaded decode exactly."""
+    cold = harness.reuse(harness.make_engine(), max_new_tokens=3)
+
+    eng = harness.make_engine()
+    claim = eng.accept_claim(harness.prefix, ClaimMode.OFFLOADABLE)
+    harness.materialize(eng, claim)
+    assert eng.offload_claim(claim.claim_id, tier=tier)
+    req = harness.reuse(eng, max_new_tokens=3)
+    assert req.status == "finished"
+    assert req.restored_tokens == len(harness.prefix)
+    assert claim.state == ClaimState.RESTORED
+    assert req.output_tokens == cold.output_tokens
+    assert validate_event_sequence(eng.events).passed
+    v = check_observation_path(eng.events, claim.claim_id, req.request_id, source_tier=tier)
+    assert v.passed, v.reasons
+    if tier == "disk":
+        assert eng.events.named("offload_tier_promote")
+
+
+def test_spill_failure_is_fail_closed(harness):
+    """An injected host->disk spill failure must leave the blocks resident in
+    the host tier (over capacity) — offloaded claim bytes are never dropped."""
+    inj = FailureInjectionConfig(
+        resident_claim_load_failure=True, fail_tier_boundary="host_to_disk"
+    )
+    eng = harness.make_engine(host_blocks=0, injection=inj)
+    claim = eng.accept_claim(harness.prefix, ClaimMode.OFFLOADABLE)
+    harness.materialize(eng, claim)
+    assert eng.offload_claim(claim.claim_id)  # store to host succeeds
+    assert eng.host.used > 0 and eng.disk.used == 0  # spill failed closed
+    fails = [
+        e
+        for e in eng.events.named("offload_worker_transfer_finished")
+        if e.payload.get("direction") == "host_to_disk" and not e.payload.get("ok")
+    ]
+    assert fails
+    # the claim still restores fine from host
+    eng.connector.injection.fail_tier_boundary = None
+    eng.connector.injection.resident_claim_load_failure = False
+    req = harness.reuse(eng)
+    assert req.status == "finished"
+    assert req.restored_tokens == len(harness.prefix)
+
+
+def test_host_overflow_spills_then_restores(harness):
+    """Host-tier pressure spills oldest blocks to disk; a later reuse restores
+    across BOTH tiers and still satisfies witness path A."""
+    eng = harness.make_engine(host_blocks=0)  # everything spills through
+    claim = eng.accept_claim(harness.prefix, ClaimMode.OFFLOADABLE)
+    harness.materialize(eng, claim)
+    assert eng.offload_claim(claim.claim_id)
+    assert eng.host.used == 0 and eng.disk.used > 0
+    assert eng.events.named("offload_tier_spill")
+    req = harness.reuse(eng)
+    assert req.status == "finished"
+    assert req.restored_tokens == len(harness.prefix)
+    v = check_observation_path(eng.events, claim.claim_id, req.request_id)
+    assert v.passed, v.reasons
+
+
+# ---------------------------------------------------------------------------
+# continuous batching: claim scoping survives shared decode steps
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def kv():
+    return KVHarness()
+
+
+def test_batched_decode_matches_sequential(kv):
+    eng_seq = kv.make_engine(device_blocks=256)
+    eng_bat = kv.make_engine(device_blocks=256)
+    prompts = [tuple(range(100 + 8 * i, 112 + 8 * i)) for i in range(4)]
+    seq = [eng_seq.run(eng_seq.submit(p, max_new_tokens=5)).output_tokens for p in prompts]
+    reqs = [eng_bat.submit(p, max_new_tokens=5) for p in prompts]
+    eng_bat.run_batch(reqs)
+    assert [r.output_tokens for r in reqs] == seq
+    assert validate_event_sequence(eng_bat.events).passed
+    assert eng_bat.events.named("batch_scheduled")
+
+
+def test_batched_ragged_max_new_tokens(kv):
+    """Requests with different decode lengths share one batch correctly."""
+    eng_seq = kv.make_engine(device_blocks=256)
+    eng_bat = kv.make_engine(device_blocks=256)
+    prompts = [tuple(range(300 + 8 * i, 312 + 8 * i)) for i in range(3)]
+    lens = [2, 5, 3]
+    seq = [
+        eng_seq.run(eng_seq.submit(p, max_new_tokens=n)).output_tokens
+        for p, n in zip(prompts, lens)
+    ]
+    reqs = [eng_bat.submit(p, max_new_tokens=n) for p, n in zip(prompts, lens)]
+    eng_bat.run_batch(reqs)
+    assert [r.output_tokens for r in reqs] == seq
+    assert [len(r.output_tokens) for r in reqs] == lens
+
+
+def test_batch_pool_exhaustion_isolation(kv):
+    """PoolExhausted raised mid-prefill (allocation stage) refuses ONLY the
+    affected request — with blocking-claim attribution — while batch-mates
+    run to completion and every request reaches a terminal event."""
+    from repro.serving.kv_cache import PoolExhausted
+
+    eng = kv.make_engine(device_blocks=64)
+    orig = eng.pool.add_block
+    calls = {"n": 0}
+
+    def flaky(*a, **kw):
+        calls["n"] += 1
+        if calls["n"] == 4:  # second request's first prefix-block store
+            raise PoolExhausted("forced", ["claim-blocker"])
+        return orig(*a, **kw)
+
+    eng.pool.add_block = flaky
+    r1 = eng.submit(tuple(range(100, 112)), max_new_tokens=2)
+    r2 = eng.submit(tuple(range(200, 212)), max_new_tokens=2)
+    r3 = eng.submit(tuple(range(300, 312)), max_new_tokens=2)
+    eng.run_batch([r1, r2, r3])
+    assert (r1.status, r2.status, r3.status) == ("finished", "refused", "finished")
+    fin = {e.request_id: e.payload["status"] for e in eng.events.named("request_finished")}
+    assert len(fin) == 3 and fin[r2.request_id] == "REFUSED_ADMISSION"
+    ref = [
+        e
+        for e in eng.events.named("scheduler_admission_refused")
+        if e.request_id == r2.request_id
+    ]
+    assert ref and ref[0].payload["blocking_claim_ids"] == ["claim-blocker"]
+    assert validate_event_sequence(eng.events).passed
+
+
+def test_batch_failure_isolation(kv):
+    """In one continuously-batched step, a same-claim restore failure refuses
+    ONLY the affected request; batch-mates finish and the refusal names the
+    failing claim alone (witness path C inside a batch)."""
+    eng = kv.make_engine(device_blocks=256)
+    tp, op = tuple(range(500, 516)), tuple(range(600, 616))
+    target = eng.accept_claim(tp, ClaimMode.OFFLOADABLE)
+    other = eng.accept_claim(op, ClaimMode.OFFLOADABLE)
+    for pfx in (tp, op):
+        eng.run(eng.submit(pfx + (5, 6), max_new_tokens=1))
+    eng.offload_claim(target.claim_id)
+    eng.offload_claim(other.claim_id, tier="disk")
+    eng.connector.injection.resident_claim_load_failure = True
+    eng.connector.injection.fail_claim_id = target.claim_id
+
+    r_target = eng.submit(tp + (7, 8), max_new_tokens=2)
+    r_other = eng.submit(op + (7, 8), max_new_tokens=2)
+    r_fresh = eng.submit(tuple(range(700, 712)), max_new_tokens=2)
+    eng.run_batch([r_target, r_other, r_fresh])
+
+    assert r_target.status == "refused" and r_target.output_tokens == []
+    assert r_other.status == "finished" and r_other.restored_tokens == len(op)
+    assert r_fresh.status == "finished"
+    assert target.state == ClaimState.RESTORATION_FAILED
+    assert other.state == ClaimState.RESTORED
+    e13s = eng.events.named("scheduler_active_request_refused")
+    assert [e.payload["blocking_claim_ids"] for e in e13s] == [[target.claim_id]]
+    v = check_failure_outcome_path(eng.events, target.claim_id, r_target.request_id)
+    assert v.passed, v.reasons
+    assert validate_event_sequence(eng.events).passed

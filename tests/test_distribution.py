@@ -9,8 +9,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.configs import ALL_SHAPES, ARCHITECTURES, SHAPES_BY_NAME, get_config, shape_applicable
 from repro.roofline.analysis import (
@@ -124,63 +122,5 @@ def test_dryrun_artifacts_complete():
         assert statuses.count("skipped") == 7
         assert "error" not in statuses
 
-
-# ---------------------------------------------------------------------------
-# property tests (hypothesis)
-# ---------------------------------------------------------------------------
-
-
-@settings(max_examples=20, deadline=None)
-@given(
-    T=st.integers(4, 64),
-    E=st.sampled_from([2, 4, 8]),
-    k=st.sampled_from([1, 2]),
-    seed=st.integers(0, 100),
-)
-def test_moe_dispatch_invariants(T, E, k, seed):
-    """Capacity-dispatch invariants: every slot token id is in [0, T]; each
-    (expert, slot) holds at most one token; gates are normalized."""
-    from repro.configs.base import ModelConfig, MoEConfig
-    from repro.models.moe import _dispatch, capacity_for
-
-    rng = np.random.default_rng(seed)
-    d = 16
-    x = jnp.asarray(rng.normal(size=(T, d)), jnp.float32)
-    router = jnp.asarray(rng.normal(size=(d, E)), jnp.float32)
-    cfg = ModelConfig(
-        name="t", family="moe", num_layers=1, d_model=d, num_heads=2,
-        num_kv_heads=2, d_ff=32, vocab_size=64,
-        moe=MoEConfig(num_experts=E, experts_per_token=k),
-    )
-    C = capacity_for(cfg, T)
-    slot_tokens, slot_gates, aux = _dispatch(x, router, k, C)
-    st_np = np.asarray(slot_tokens)
-    assert ((st_np >= 0) & (st_np <= T)).all()
-    real = st_np[st_np < T]
-    # a token appears at most k times across all experts
-    _, counts = np.unique(real, return_counts=True)
-    assert (counts <= k).all()
-    assert float(aux) > 0
-
-
-@settings(max_examples=20, deadline=None)
-@given(data=st.data())
-def test_claim_state_machine_never_skips_acceptance(data):
-    """Property: no sequence of transitions reaches an outcome state without
-    passing through ACCEPTED-legal edges (fail-closed state machine)."""
-    from repro.core.claims import _TRANSITIONS, ClaimState, InvalidClaimTransition, ResidentClaim
-    from repro.core.claims import CacheIdentity, MaterializationPredicate
-
-    claim = ResidentClaim(
-        claim_id="c", object_id="o",
-        predicate=MaterializationPredicate("leading_prefix_at_least", 4),
-        mode=None, cache_identity=CacheIdentity("m", "t"),
-    )
-    for _ in range(data.draw(st.integers(1, 6))):
-        target = data.draw(st.sampled_from(list(ClaimState)))
-        legal = target in _TRANSITIONS[claim.state]
-        if legal:
-            claim.transition(target)
-        else:
-            with pytest.raises(InvalidClaimTransition):
-                claim.transition(target)
+# Property tests (hypothesis) live in tests/test_hypothesis_properties.py so
+# this module always collects even when hypothesis is absent.

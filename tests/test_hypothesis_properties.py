@@ -1,0 +1,95 @@
+"""Hypothesis property tests (kernels, MoE dispatch, claim state machine).
+
+Collected separately from the deterministic suites so that a missing
+``hypothesis`` skips only this module instead of hard-failing collection of
+tests/test_kernels.py and tests/test_distribution.py (declared as a test
+dependency in requirements.txt).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ops, ref
+
+
+def _rand(rng, shape, dtype):
+    return jnp.asarray(rng.normal(size=shape), dtype)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seq=st.integers(9, 48),
+    kv=st.sampled_from([1, 2]),
+    g=st.integers(1, 3),
+    window=st.sampled_from([0, 8]),
+)
+def test_flash_attention_property(seq, kv, g, window):
+    """Kernel == oracle over randomly drawn GQA/window/odd-length configs."""
+    rng = np.random.default_rng(seq * 100 + kv * 10 + g)
+    H, D = kv * g, 16
+    q = _rand(rng, (1, H, seq, D), jnp.float32)
+    k = _rand(rng, (1, kv, seq, D), jnp.float32)
+    v = _rand(rng, (1, kv, seq, D), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, window=window, block_q=16, block_k=16)
+    expect = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    T=st.integers(4, 64),
+    E=st.sampled_from([2, 4, 8]),
+    k=st.sampled_from([1, 2]),
+    seed=st.integers(0, 100),
+)
+def test_moe_dispatch_invariants(T, E, k, seed):
+    """Capacity-dispatch invariants: every slot token id is in [0, T]; each
+    (expert, slot) holds at most one token; gates are normalized."""
+    from repro.configs.base import ModelConfig, MoEConfig
+    from repro.models.moe import _dispatch, capacity_for
+
+    rng = np.random.default_rng(seed)
+    d = 16
+    x = jnp.asarray(rng.normal(size=(T, d)), jnp.float32)
+    router = jnp.asarray(rng.normal(size=(d, E)), jnp.float32)
+    cfg = ModelConfig(
+        name="t", family="moe", num_layers=1, d_model=d, num_heads=2,
+        num_kv_heads=2, d_ff=32, vocab_size=64,
+        moe=MoEConfig(num_experts=E, experts_per_token=k),
+    )
+    C = capacity_for(cfg, T)
+    slot_tokens, slot_gates, aux = _dispatch(x, router, k, C)
+    st_np = np.asarray(slot_tokens)
+    assert ((st_np >= 0) & (st_np <= T)).all()
+    real = st_np[st_np < T]
+    # a token appears at most k times across all experts
+    _, counts = np.unique(real, return_counts=True)
+    assert (counts <= k).all()
+    assert float(aux) > 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(data=st.data())
+def test_claim_state_machine_never_skips_acceptance(data):
+    """Property: no sequence of transitions reaches an outcome state without
+    passing through ACCEPTED-legal edges (fail-closed state machine)."""
+    from repro.core.claims import _TRANSITIONS, ClaimState, InvalidClaimTransition, ResidentClaim
+    from repro.core.claims import CacheIdentity, MaterializationPredicate
+
+    claim = ResidentClaim(
+        claim_id="c", object_id="o",
+        predicate=MaterializationPredicate("leading_prefix_at_least", 4),
+        mode=None, cache_identity=CacheIdentity("m", "t"),
+    )
+    for _ in range(data.draw(st.integers(1, 6))):
+        target = data.draw(st.sampled_from(list(ClaimState)))
+        legal = target in _TRANSITIONS[claim.state]
+        if legal:
+            claim.transition(target)
+        else:
+            with pytest.raises(InvalidClaimTransition):
+                claim.transition(target)

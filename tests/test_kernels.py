@@ -140,26 +140,5 @@ def test_kv_block_copy_matches_ref(dtype):
     out = ops.kv_block_copy(src, idx)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(ref.kv_block_copy_ref(src, idx)))
 
-
-# ------------------------------------------------------------ property (hypothesis)
-from hypothesis import given, settings
-from hypothesis import strategies as st
-
-
-@settings(max_examples=10, deadline=None)
-@given(
-    seq=st.integers(9, 48),
-    kv=st.sampled_from([1, 2]),
-    g=st.integers(1, 3),
-    window=st.sampled_from([0, 8]),
-)
-def test_flash_attention_property(seq, kv, g, window):
-    """Kernel == oracle over randomly drawn GQA/window/odd-length configs."""
-    rng = np.random.default_rng(seq * 100 + kv * 10 + g)
-    H, D = kv * g, 16
-    q = _rand(rng, (1, H, seq, D), jnp.float32)
-    k = _rand(rng, (1, kv, seq, D), jnp.float32)
-    v = _rand(rng, (1, kv, seq, D), jnp.float32)
-    out = ops.flash_attention(q, k, v, causal=True, window=window, block_q=16, block_k=16)
-    expect = ref.flash_attention_ref(q, k, v, causal=True, window=window)
-    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=2e-5, atol=2e-5)
+# Property tests (hypothesis) live in tests/test_hypothesis_properties.py so
+# this module always collects even when hypothesis is absent.
