@@ -1,5 +1,6 @@
 """Multi-claim attribution control (paper §7 path C, §8.3) + serving
-throughput (continuous batching vs sequential decode).
+throughput (continuous batching vs sequential decode) + the paged-decode
+batch×context ceiling.
 
 Attribution gate: 3/3 repetitions must attribute failure/refusal ONLY to the
 target claim while the non-target claim restores successfully.
@@ -7,8 +8,20 @@ target claim while the non-target claim restores successfully.
 Serving gate: the same workload decoded through ``run_batch`` (one jitted
 step per token position for the whole batch) must reach >= 2x the
 sequential-decode throughput — the perf criterion of the continuous-batching
-refactor.  Results land in ``results/BENCH_serving.json`` so successive PRs
-have a throughput/latency trajectory.
+refactor.
+
+Ceiling gate: under ONE device-KV budget (pool pages × block_size tokens),
+paged decode must sustain >= 2x the dense-assembly batch×context ceiling at
+equal logits parity.  Dense assembly gives every in-flight request a
+private contiguous cache (B × cache_len slots, context hard-capped at
+cache_len); the paged path shares prefix pages across the batch and keeps
+only the in-flight tail per request, so the same budget serves both more
+requests AND longer contexts.  The paged cell is RUN, not modeled — every
+request must finish, and at a common feasible point both modes must agree
+on logits.
+
+Results land in ``results/BENCH_serving.json`` so successive PRs have a
+throughput/latency/ceiling trajectory.
 
   PYTHONPATH=src python benchmarks/bench_multi_claim.py [--fast]
 """
@@ -100,6 +113,7 @@ def run_serving(
     result = {
         "workload": {
             "model": eng.cfg.name,
+            "decode_mode": eng.decode_mode,
             "batch": batch,
             "prompt_len": prompt_len,
             "new_tokens": new_tokens,
@@ -124,6 +138,102 @@ def run_serving(
     return result
 
 
+def run_ceiling(out_path: Path = Path("results/BENCH_serving.json")):
+    """Max batch×context under one device-KV budget: paged vs dense.
+
+    Budget = device_blocks × block_size KV token slots.  The dense ceiling
+    is structural: B_dense = budget // cache_len private caches, context
+    capped at cache_len - new_tokens.  The paged cell shares a common
+    prefix across the batch (pages held once) and spends budget only on
+    unique pages + per-request tails; it is executed end to end.
+    """
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config, reduced
+    from repro.models.registry import build_model
+    from repro.serving.engine import ServingEngine, _round_up
+
+    cfg = reduced(get_config("qwen3-1.7b"))
+    bundle = build_model(cfg)
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    bs, N, cache_len, new = 4, 64, 32, 4
+    budget = N * bs  # device KV token slots
+
+    def mk(mode):
+        return ServingEngine(
+            bundle, params, block_size=bs, device_blocks=N,
+            cache_len=cache_len, decode_mode=mode,
+        )
+
+    # --- dense ceiling: private contiguous caches, context <= cache_len ---
+    B_dense = budget // cache_len
+    ctx_dense = cache_len - new
+    shared_d = tuple(range(10, 10 + ctx_dense - bs))
+    eng_d = mk("dense")
+    reqs = [eng_d.submit(shared_d + (100 + i,) * bs, max_new_tokens=new) for i in range(B_dense)]
+    eng_d.run_batch(reqs)
+    dense_ok = all(r.status == "finished" for r in reqs)
+
+    # --- paged cell: shared prefix pages + per-request tails -------------
+    B_paged = 2 * B_dense
+    tail_cap = _round_up(new, 8)
+    # budget: prefix pages + one suffix page/request + per-request tails
+    prefix_blocks = (budget - B_paged * (bs + tail_cap)) // bs
+    ctx_paged = prefix_blocks * bs + bs  # shared prefix + distinct suffix block
+    shared_p = tuple(range(10, 10 + prefix_blocks * bs))
+    eng_p = mk("paged")
+    reqs_p = [
+        eng_p.submit(shared_p + (100 + i,) * bs, max_new_tokens=new)
+        for i in range(B_paged)
+    ]
+    eng_p.run_batch(reqs_p)
+    paged_ok = all(r.status == "finished" for r in reqs_p)
+    pages_used = eng_p.pool.used
+
+    # --- logits parity at a common feasible point ------------------------
+    common = tuple(range(400, 400 + min(ctx_dense, 24)))
+    lg = {mode: mk(mode).prefill_logits(common) for mode in ("dense", "paged")}
+    parity = bool(
+        np.allclose(lg["paged"], lg["dense"], atol=3e-2, rtol=3e-2)
+        and lg["paged"].argmax() == lg["dense"].argmax()
+    )
+
+    ceiling_dense = B_dense * ctx_dense
+    ceiling_paged = B_paged * ctx_paged
+    result = {
+        "budget_kv_token_slots": budget,
+        "dense": {
+            "batch": B_dense,
+            "context": ctx_dense,
+            "batch_x_context": ceiling_dense,
+            "all_finished": dense_ok,
+            "limit": "private cache per request: context <= cache_len, B <= budget/cache_len",
+        },
+        "paged": {
+            "batch": B_paged,
+            "context": ctx_paged,
+            "batch_x_context": ceiling_paged,
+            "all_finished": paged_ok,
+            "pool_pages_used": pages_used,
+            "limit": "unique pages + per-request tail; shared prefix held once",
+        },
+        "ceiling_ratio": round(ceiling_paged / ceiling_dense, 2),
+        "logits_parity": parity,
+        "meets_2x_criterion": bool(
+            paged_ok and dense_ok and parity and ceiling_paged >= 2 * ceiling_dense
+        ),
+    }
+    out_path = Path(out_path)
+    if out_path.exists():
+        merged = json.loads(out_path.read_text())
+    else:
+        merged = {}
+    merged["paged_ceiling"] = result
+    out_path.write_text(json.dumps(merged, indent=1))
+    return result
+
+
 if __name__ == "__main__":
     fast = "--fast" in sys.argv
     make_engine = default_engine_factory()
@@ -135,5 +245,7 @@ if __name__ == "__main__":
         reps=1 if fast else 3,
     )
     print(json.dumps(serving, indent=1))
-    if not serving["meets_2x_criterion"]:
+    ceiling = run_ceiling()
+    print(json.dumps(ceiling, indent=1))
+    if not serving["meets_2x_criterion"] or not ceiling["meets_2x_criterion"]:
         sys.exit(1)

@@ -1,27 +1,27 @@
 #!/usr/bin/env bash
-# CI entry point: tier-1 tests + the fast serving perf gate.
+# CI entry point: tier-1 tests + the fast serving perf gates.
 #
 #   bash scripts/ci.sh
 #
-# 1. Runs the repo's tier-1 verify command (ROADMAP.md).  tests/test_checker.py
-#    is excluded from the gate: it has failed since the seed because the
-#    checker's data assets (src/repro/core/data/modes.yaml + descriptor
-#    YAMLs) were never committed — tracked as a ROADMAP open item.  Remove
-#    the --ignore once those assets land.
+# 1. Runs the repo's tier-1 verify command (ROADMAP.md) over the FULL test
+#    suite — including tests/test_checker.py, whose data assets
+#    (src/repro/core/data/modes.yaml + descriptor YAMLs) are committed.
+#    pytest -x fails the gate on the first regression.
 # 2. Runs the fast subset of benchmarks/bench_multi_claim.py: the 3/3
-#    multi-claim attribution control plus the batched-vs-sequential decode
-#    gate, emitting results/BENCH_serving.json (throughput/latency
-#    trajectory for future PRs).  The bench exits non-zero if batched decode
-#    falls under 2x sequential throughput.
+#    multi-claim attribution control, the batched-vs-sequential decode
+#    throughput gate (>= 2x), and the paged-decode batch×context ceiling
+#    gate (>= 2x the dense-assembly ceiling under one device-KV budget, at
+#    equal logits parity), emitting results/BENCH_serving.json.  The bench
+#    exits non-zero if either gate fails.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== tier-1: pytest (test_checker excluded: missing seed data assets) =="
-python -m pytest -x -q --ignore=tests/test_checker.py
+echo "== tier-1: pytest (full suite, checker included) =="
+python -m pytest -x -q
 
-echo "== serving gates: multi-claim attribution + batched decode (fast) =="
+echo "== serving gates: attribution + batched decode + paged ceiling (fast) =="
 python benchmarks/bench_multi_claim.py --fast
 
 echo "== BENCH_serving.json =="

@@ -12,7 +12,10 @@ import jax
 
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.kv_block_copy import kv_block_copy_pallas
-from repro.kernels.paged_attention import paged_attention_pallas
+from repro.kernels.paged_attention import (
+    paged_attention_pallas,
+    paged_decode_attention_pallas,
+)
 
 
 def _interpret_default() -> bool:
@@ -33,6 +36,19 @@ def paged_attention(q, k_pages, v_pages, block_tables, lengths, *, softcap=0.0, 
     interpret = _interpret_default() if interpret is None else interpret
     return paged_attention_pallas(
         q, k_pages, v_pages, block_tables, lengths, softcap=softcap, interpret=interpret
+    )
+
+
+@partial(jax.jit, static_argnames=("softcap", "window", "interpret"))
+def paged_decode_attention(
+    q, k_pages, v_pages, block_tables, prefix_len, k_tail, v_tail, tail_pos,
+    cur_pos, *, softcap=0.0, window=0, interpret=None,
+):
+    """Batched serving decode: block-table prefix + in-flight tail."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return paged_decode_attention_pallas(
+        q, k_pages, v_pages, block_tables, prefix_len, k_tail, v_tail,
+        tail_pos, cur_pos, softcap=softcap, window=window, interpret=interpret,
     )
 
 

@@ -135,3 +135,177 @@ def paged_attention_pallas(
         out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
         interpret=interpret,
     )(block_tables, lengths, q, k_pages, v_pages)
+
+
+# ---------------------------------------------------------------------------
+# batched serving entry point: block-table prefix + in-flight tail
+# ---------------------------------------------------------------------------
+
+
+def _paged_decode_kernel(
+    bt_ref,  # [B, P+1] scalar prefetch: block tables (last column padding)
+    len_ref,  # [B] scalar prefetch: prefix tokens addressed via the table
+    cpos_ref,  # [B] scalar prefetch: current query positions
+    q_ref,  # [1, 1, G, D]
+    k_ref,  # [1, 1, page, D]
+    v_ref,
+    kt_ref,  # [1, 1, T, D]  in-flight tail
+    vt_ref,
+    tp_ref,  # [1, T] int32  absolute tail positions (-1 = empty)
+    o_ref,  # [1, 1, G, D]
+    acc_ref,
+    m_ref,
+    l_ref,
+    *,
+    sm_scale: float,
+    page_size: int,
+    num_pages: int,
+    softcap: float,
+    window: int,
+):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[b]
+    cur_pos = cpos_ref[b]
+
+    def _online_update(s, v):
+        m_prev = m_ref[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        pexp = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(pexp, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(
+            pexp.astype(v.dtype), v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+
+    @pl.when(jnp.logical_and(p < num_pages, p * page_size < length))
+    def _pages():
+        q = q_ref[0, 0].astype(jnp.float32)  # [G, D]
+        k = k_ref[0, 0].astype(jnp.float32)  # [page, D]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * sm_scale  # [G, page]
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        k_pos = p * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        valid = k_pos < length
+        if window:
+            valid &= cur_pos - k_pos < window
+        s = jnp.where(valid, s, NEG_INF)
+        _online_update(s, v)
+
+    @pl.when(p == num_pages)
+    def _tail_and_finalize():
+        q = q_ref[0, 0].astype(jnp.float32)  # [G, D]
+        kt = kt_ref[0, 0].astype(jnp.float32)  # [T, D]
+        vt = vt_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, kt, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * sm_scale  # [G, T]
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        tp = tp_ref[0, :][None, :]  # [1, T]
+        valid = (tp >= 0) & (tp <= cur_pos)
+        if window:
+            valid &= cur_pos - tp < window
+        s = jnp.where(valid, s, NEG_INF)
+        _online_update(s, vt)
+        o_ref[0, 0, ...] = (
+            acc_ref[...] / jnp.maximum(l_ref[:, :1], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+def paged_decode_attention_pallas(
+    q,
+    k_pages,
+    v_pages,
+    block_tables,
+    prefix_len,
+    k_tail,
+    v_tail,
+    tail_pos,
+    cur_pos,
+    *,
+    softcap: float = 0.0,
+    window: int = 0,
+    interpret: bool = False,
+):
+    """Batched decode-step attention over paged prefix KV plus a dense tail —
+    the serving engine's zero-copy decode entry point.
+
+    The prefix pages stay in place in the device pool and stream HBM->VMEM
+    via the scalar-prefetched block table; the tail (trailing partial block
+    + already-decoded tokens) rides along as one extra grid step, so a
+    request's ENTIRE context is attended without assembling a dense cache.
+
+    q:            [B, KV, G, D]  (GQA query groups)
+    k/v_pages:    [KV, N_pages, page_size, D]  (the device page pool)
+    block_tables: [B, P] int32   page ids per sequence
+    prefix_len:   [B] int32      tokens addressed via the block table
+    k/v_tail:     [B, KV, T, D]  in-flight tail
+    tail_pos:     [B, T] int32   absolute tail positions (-1 = empty)
+    cur_pos:      [B] int32      query token position
+    -> [B, KV, G, D]
+    """
+    B, KV, G, D = q.shape
+    page_size = k_pages.shape[2]
+    P = block_tables.shape[1]
+    T = k_tail.shape[2]
+    sm_scale = 1.0 / math.sqrt(D)
+
+    # one padding column so the page index map stays in bounds on the tail step
+    bt = jnp.concatenate(
+        [block_tables.astype(jnp.int32), jnp.zeros((B, 1), jnp.int32)], axis=1
+    )
+
+    kernel = functools.partial(
+        _paged_decode_kernel,
+        sm_scale=sm_scale,
+        page_size=page_size,
+        num_pages=P,
+        softcap=softcap,
+        window=window,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, KV, P + 1),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, kv, p, bt, ln, cp: (b, kv, 0, 0)),
+            pl.BlockSpec((1, 1, page_size, D), lambda b, kv, p, bt, ln, cp: (kv, bt[b, p], 0, 0)),
+            pl.BlockSpec((1, 1, page_size, D), lambda b, kv, p, bt, ln, cp: (kv, bt[b, p], 0, 0)),
+            pl.BlockSpec((1, 1, T, D), lambda b, kv, p, bt, ln, cp: (b, kv, 0, 0)),
+            pl.BlockSpec((1, 1, T, D), lambda b, kv, p, bt, ln, cp: (b, kv, 0, 0)),
+            pl.BlockSpec((1, T), lambda b, kv, p, bt, ln, cp: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, kv, p, bt, ln, cp: (b, kv, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),
+            pltpu.VMEM((G, LANES), jnp.float32),
+            pltpu.VMEM((G, LANES), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
+        interpret=interpret,
+    )(
+        bt,
+        prefix_len.astype(jnp.int32),
+        cur_pos.astype(jnp.int32),
+        q,
+        k_pages,
+        v_pages,
+        k_tail,
+        v_tail,
+        tail_pos.astype(jnp.int32),
+    )

@@ -56,5 +56,36 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths, *, softcap=0
     return jnp.einsum("bkgs,bksd->bkgd", p, vd).astype(q.dtype)
 
 
+def paged_decode_attention_ref(
+    q, k_pages, v_pages, block_tables, prefix_len, k_tail, v_tail, tail_pos,
+    cur_pos, *, softcap=0.0, window=0,
+):
+    """Dense-gather oracle for the batched paged-decode entry point.
+
+    q: [B, KV, G, D]; k/v_pages: [KV, N, page, D]; block_tables: [B, P];
+    prefix_len, cur_pos: [B]; k/v_tail: [B, KV, T, D]; tail_pos: [B, T]
+    -> [B, KV, G, D].
+    """
+    B, KV, G, D = q.shape
+    page = k_pages.shape[2]
+    P = block_tables.shape[1]
+    kd = k_pages[:, block_tables].transpose(1, 0, 2, 3, 4).reshape(B, KV, P * page, D)
+    vd = v_pages[:, block_tables].transpose(1, 0, 2, 3, 4).reshape(B, KV, P * page, D)
+    k_all = jnp.concatenate([kd, k_tail], axis=2).astype(jnp.float32)
+    v_all = jnp.concatenate([vd, v_tail], axis=2).astype(jnp.float32)
+    ppos = jnp.broadcast_to(jnp.arange(P * page)[None], (B, P * page))
+    ppos = jnp.where(ppos < prefix_len[:, None], ppos, -1)
+    pos = jnp.concatenate([ppos, tail_pos], axis=1)  # [B, S]
+    s = jnp.einsum("bkgd,bksd->bkgs", q.astype(jnp.float32), k_all) / math.sqrt(D)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    valid = (pos >= 0) & (pos <= cur_pos[:, None])
+    if window:
+        valid &= cur_pos[:, None] - pos < window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgs,bksd->bkgd", p, v_all).astype(q.dtype)
+
+
 def kv_block_copy_ref(src_pages, indices):
     return src_pages[indices]

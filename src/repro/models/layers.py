@@ -331,6 +331,110 @@ def attention_prefill(
     return out[:, :Sq].astype(q.dtype)
 
 
+def paged_attention_decode(
+    q,
+    k_pages,
+    v_pages,
+    block_tables,
+    prefix_len,
+    k_tail,
+    v_tail,
+    tail_pos,
+    cur_pos,
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+):
+    """Single-step decode attention over PAGED prefix KV plus a dense tail.
+
+    The prefix lives in the device page pool and is addressed through
+    per-request block tables — no dense per-request cache is assembled; the
+    tail holds the in-flight tokens (partial trailing block + decoded
+    tokens) that are not yet page-resident.
+
+    q:            [B, 1, H, D]
+    k/v_pages:    [KV, N, page, D]   (this layer's slice of the pool)
+    block_tables: [B, P] int32       page ids per request (padding masked
+                                     by prefix_len)
+    prefix_len:   [B] int32          tokens addressed via the block table
+    k/v_tail:     [B, T, KV, D]      in-flight tail (this layer)
+    tail_pos:     [B, T] int32       absolute tail positions (-1 = empty)
+    cur_pos:      [B] int32          query token position
+    Returns [B, 1, H, D].
+
+    On the TPU target this lowers to the Pallas paged-attention decode
+    kernel (kernels/paged_attention.paged_decode_attention_pallas), which
+    streams pages HBM->VMEM via the scalar-prefetched block table; this jnp
+    formulation is the same math expressed with an explicit page gather.
+    """
+    B = q.shape[0]
+    page = k_pages.shape[2]
+    P = block_tables.shape[1]
+    if jax.default_backend() == "tpu":
+        # stream pages HBM->VMEM through the scalar-prefetched block table —
+        # the pool is read strictly in place, nothing is gathered densely
+        from repro.kernels.ops import paged_decode_attention
+
+        KV, G = k_pages.shape[0], q.shape[2] // k_pages.shape[0]
+        out = paged_decode_attention(
+            q[:, 0].reshape(B, KV, G, q.shape[3]),
+            k_pages,
+            v_pages,
+            block_tables,
+            prefix_len,
+            jnp.transpose(k_tail, (0, 2, 1, 3)),
+            jnp.transpose(v_tail, (0, 2, 1, 3)),
+            tail_pos,
+            cur_pos,
+            softcap=softcap,
+            window=window,
+        )
+        return out.reshape(B, 1, q.shape[2], q.shape[3])
+    # gather the referenced pages: [KV, B, P, page, D] -> [B, P*page, KV, D]
+    kd = jnp.transpose(k_pages[:, block_tables], (1, 2, 3, 0, 4)).reshape(
+        B, P * page, k_pages.shape[0], k_pages.shape[3]
+    )
+    vd = jnp.transpose(v_pages[:, block_tables], (1, 2, 3, 0, 4)).reshape(
+        B, P * page, v_pages.shape[0], v_pages.shape[3]
+    )
+    # prefix positions are the leading prefix by construction; mask slots
+    # beyond prefix_len (block-table padding and partial last pages)
+    ppos = jnp.broadcast_to(jnp.arange(P * page, dtype=jnp.int32)[None], (B, P * page))
+    ppos = jnp.where(ppos < prefix_len[:, None], ppos, -1)
+    k_all = jnp.concatenate([kd, k_tail], axis=1)
+    v_all = jnp.concatenate([vd, v_tail], axis=1)
+    pos_all = jnp.concatenate([ppos, tail_pos], axis=1)
+    return attention_decode(
+        q, k_all, v_all, kv_positions=pos_all, cur_pos=cur_pos,
+        window=window, softcap=softcap,
+    )
+
+
+def attn_paged_decode_layer(
+    p, cfg, x, k_pages, v_pages, block_tables, prefix_len,
+    tail_k, tail_v, tail_pos, cur_pos, tail_slot, *, use_rope=True
+):
+    """One-token decode over paged prefix KV: writes the new (k, v) into the
+    tail at ``tail_slot`` and attends pages + tail in place.
+
+    x: [B, 1, d]; k/v_pages: [KV, N, page, Dh]; tail_k/v: [B, T, KV, Dh];
+    tail_pos: [B, T] (already updated with cur_pos at tail_slot).
+    Returns (out [B, 1, d], new_tail_k, new_tail_v).
+    """
+    B = x.shape[0]
+    q, k, v = attn_qkv(p, cfg, x, cur_pos[:, None], use_rope=use_rope)
+    new_tk = slot_update(tail_k, k, tail_slot)
+    new_tv = slot_update(tail_v, v, tail_slot)
+    new_tk, new_tv = jax.lax.optimization_barrier((new_tk, new_tv))
+    out = paged_attention_decode(
+        q, k_pages, v_pages, block_tables, prefix_len,
+        new_tk, new_tv, tail_pos, cur_pos,
+        window=cfg.sliding_window, softcap=cfg.attn_logit_softcap,
+    )
+    out = out.reshape(B, 1, -1) @ p["wo"]
+    return out, new_tk, new_tv
+
+
 def attention_decode(q, k_cache, v_cache, *, kv_positions, cur_pos, window: int = 0, softcap: float = 0.0):
     """Single-step decode attention against a dense (or ring) KV cache.
 

@@ -83,6 +83,11 @@ class ModelBundle:
     make_cache: Callable[[int, int], Any]
     batch_spec: Callable[[ShapeSpec], Dict[str, jax.ShapeDtypeStruct]]
     cache_spec: Callable[[ShapeSpec], Any]
+    # paged serving entry points (transformer families only; None elsewhere):
+    # prefill_collect_fn(params, batch) -> (last-valid logits, k [L,B,S,KV,Dh], v)
+    # paged_decode_fn(params, state, tokens, cur_pos) -> (logits, state)
+    prefill_collect_fn: Optional[Callable[..., Any]] = None
+    paged_decode_fn: Optional[Callable[..., Any]] = None
 
 
 def _tokens_spec(b, s):
@@ -152,6 +157,8 @@ def build_model(cfg: ModelConfig, mesh=None, moe_strategy: str = "auto") -> Mode
         pre = lambda p, b, cl: lib.prefill(p, cfg, b, cl, mesh=mesh, moe_strategy=moe_strategy)
         dec = lambda p, c, t, pos: lib.decode_step(p, cfg, c, t, pos, mesh=mesh, moe_strategy=moe_strategy)
         mk_cache = lambda b, cl: lib.make_cache(cfg, b, cl)
+        prefill_collect = lambda p, b: lib.prefill_collect(p, cfg, b, mesh=mesh, moe_strategy=moe_strategy)
+        paged_dec = lambda p, s, t, pos: lib.paged_decode_step(p, cfg, s, t, pos, mesh=mesh, moe_strategy=moe_strategy)
 
         def batch_spec(shape):
             b = shape.global_batch
@@ -169,6 +176,11 @@ def build_model(cfg: ModelConfig, mesh=None, moe_strategy: str = "auto") -> Mode
         def cache_spec(shape):
             return jax.eval_shape(lambda: lib.make_cache(cfg, shape.global_batch, shape.seq_len))
 
+    paged_kw = {}
+    if fam not in ("ssm", "hybrid", "audio") and cfg.kv_cache_dtype != "int8":
+        # int8 blocks carry no scale sidecar yet; the paged path requires it,
+        # so int8 engines stay on the dense decode path
+        paged_kw = {"prefill_collect_fn": prefill_collect, "paged_decode_fn": paged_dec}
     return ModelBundle(
         cfg=cfg,
         init_params=init_params,
@@ -178,4 +190,5 @@ def build_model(cfg: ModelConfig, mesh=None, moe_strategy: str = "auto") -> Mode
         make_cache=mk_cache,
         batch_spec=batch_spec,
         cache_spec=cache_spec,
+        **paged_kw,
     )

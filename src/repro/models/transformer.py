@@ -238,6 +238,143 @@ def prefill(params, cfg, batch, cache_len: int, *, mesh=None, moe_strategy="auto
     return logits, cache
 
 
+def prefill_collect(params, cfg, batch, *, mesh=None, moe_strategy="auto"):
+    """Batched prefill for the paged serving path.
+
+    Unlike ``prefill`` this returns the FULL-length collected KV
+    [L, B, S, KV, Dh] instead of a dense cache trimmed to ``cache_len`` —
+    the engine slices it into pool pages (full blocks) and a tail (the
+    trailing partial block), so prompt length is bounded by pool pages,
+    not by a per-request cache shape.
+
+    ``batch`` may carry ``valid_len`` [B]: same-bucket prompts are padded on
+    the RIGHT and masked — causal attention already keeps padded positions
+    out of every valid row, so only the logit gather (at valid_len - 1) and
+    the engine-side KV slicing need the true lengths.
+    """
+    tokens = batch["tokens"]
+    extra = batch.get("patch_embeds")
+    B, S = tokens.shape
+    P_len = extra.shape[1] if extra is not None else 0
+    St = S + P_len
+    x = embed_tokens(params, cfg, tokens, extra)
+    positions = jnp.broadcast_to(jnp.arange(St)[None], (B, St))
+    x, _, (ck, cv) = forward_hidden(
+        params, cfg, x, positions, mesh=mesh, moe_strategy=moe_strategy, collect_cache=True
+    )
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    valid_len = batch.get("valid_len")
+    last = (
+        jnp.full((B,), St - 1, jnp.int32)
+        if valid_len is None
+        else valid_len.astype(jnp.int32) + P_len - 1
+    )
+    logits = (x[jnp.arange(B), last] @ unembed(cfg, params)).astype(jnp.float32)
+    return logits, ck, cv
+
+
+def paged_decode_step(params, cfg, state, tokens, cur_pos, *, mesh=None, moe_strategy="auto"):
+    """One decode step over paged prefix KV — the zero-copy serving path.
+
+    ``state``:
+      k_pages/v_pages [L, KV, N, page, Dh]  the device page pool (read-only)
+      block_tables    [B, P] int32          per-request page ids
+      prefix_len      [B] int32             tokens addressed via the table
+      k_tail/v_tail   [L, B, T, KV, Dh]     in-flight tail (written here)
+      tail_pos        [B, T] int32          absolute tail positions (-1 empty)
+    tokens, cur_pos: [B].  Returns (logits [B, V], state with updated tail).
+
+    The page pool is never rewritten: a step only appends one (k, v) row to
+    the tail at ``cur_pos - prefix_len`` and attends pages + tail in place.
+
+    On TPU the batch rides the paged-attention kernel's grid.  On the host
+    CPU backend the rows run through ``lax.map`` instead: XLA:CPU's
+    threaded runtime partitions batched loops non-uniformly across rows,
+    which lets float rounding depend on a request's ROW POSITION — under
+    map every row executes the same compiled body, so a request's tokens
+    are bitwise independent of where it sits in the batch (the property
+    the batched-vs-sequential parity tests pin down).
+    """
+    if jax.default_backend() != "tpu" and tokens.shape[0] > 1:
+        kp, vp = state["k_pages"], state["v_pages"]
+
+        def row_fn(row):
+            st = {
+                "k_pages": kp,
+                "v_pages": vp,
+                "block_tables": row["bt"][None],
+                "prefix_len": row["plen"][None],
+                "k_tail": row["tk"][:, None],
+                "v_tail": row["tv"][:, None],
+                "tail_pos": row["tpos"][None],
+            }
+            lg, st2 = paged_decode_step(
+                params, cfg, st, row["tok"][None], row["pos"][None],
+                mesh=mesh, moe_strategy=moe_strategy,
+            )
+            return {
+                "lg": lg[0],
+                "tk": st2["k_tail"][:, 0],
+                "tv": st2["v_tail"][:, 0],
+                "tpos": st2["tail_pos"][0],
+            }
+
+        rows = {
+            "bt": state["block_tables"],
+            "plen": state["prefix_len"],
+            "tk": jnp.moveaxis(state["k_tail"], 1, 0),
+            "tv": jnp.moveaxis(state["v_tail"], 1, 0),
+            "tpos": state["tail_pos"],
+            "tok": tokens,
+            "pos": cur_pos,
+        }
+        out = jax.lax.map(row_fn, rows)
+        new_state = dict(
+            state,
+            k_tail=jnp.moveaxis(out["tk"], 0, 1),
+            v_tail=jnp.moveaxis(out["tv"], 0, 1),
+            tail_pos=out["tpos"],
+        )
+        return out["lg"], new_state
+
+    from repro.models.layers import attn_paged_decode_layer, slot_update as _slot_update
+
+    x = params["embed"][tokens][:, None, :]  # [B, 1, d]
+    slot = cur_pos - state["prefix_len"]
+    tail_pos = _slot_update(
+        state["tail_pos"][..., None], cur_pos[:, None, None], slot
+    )[..., 0]
+
+    def body(carry, xs):
+        x, = carry
+        lp, kp, vp, tk, tv = xs
+        x = constrain_activations(x, mesh, seq_dim=None)
+        h = apply_norm(cfg.norm, lp["ln1"], x)
+        a, ntk, ntv = attn_paged_decode_layer(
+            lp["attn"], cfg, h, kp, vp,
+            state["block_tables"], state["prefix_len"],
+            tk, tv, tail_pos, cur_pos, slot,
+        )
+        x = x + a
+        h = apply_norm(cfg.norm, lp["ln2"], x)
+        if cfg.moe.num_experts:
+            m, _ = _moe_block(lp, cfg, h, mesh, moe_strategy)
+        else:
+            m = mlp_apply(lp["mlp"], h, cfg.activation)
+        x = x + m
+        return (x,), (constrain_activations(ntk, mesh), constrain_activations(ntv, mesh))
+
+    (x,), (ntk, ntv) = jax.lax.scan(
+        body,
+        (x,),
+        (params["layers"], state["k_pages"], state["v_pages"], state["k_tail"], state["v_tail"]),
+    )
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    logits = (x[:, 0] @ unembed(cfg, params)).astype(jnp.float32)
+    new_state = dict(state, k_tail=ntk, v_tail=ntv, tail_pos=tail_pos)
+    return logits, new_state
+
+
 def decode_step(params, cfg, cache, tokens, cur_pos, *, mesh=None, moe_strategy="auto"):
     """One decode step.  tokens, cur_pos: [B]. Returns (logits [B, V], cache)."""
     B = tokens.shape[0]

@@ -26,6 +26,8 @@ from functools import lru_cache
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.core.claims import (
     CacheIdentity,
@@ -433,6 +435,40 @@ class EngineCore:
         req.restored_tokens = sum(len(b.tokens) for b in hit_blocks)
         self.connector.complete_job(job)
         return True
+
+    # ------------------------------------------------------------ shared decode
+    def _greedy_decode_loop(self, reqs, state, logits, pos, step):
+        """Ragged continuous-batched greedy decode, shared by every engine
+        kind: ONE jitted step per token position for the whole batch.
+
+        ``step(state, tokens [B], pos [B]) -> (logits [B, V], state)`` is the
+        kind-specific jitted transition (paged KV step, dense-cache step, or
+        recurrent-state step with states stacked on the batch axis).
+        Finished rows re-feed their last token at a frozen position — a
+        no-op replay that keeps the batch dense.
+
+        The state may carry MORE rows than ``reqs``: engines pad batches to
+        a bucketed width so sequential (B=1) and batched execution share the
+        SAME compiled step — structural bitwise parity, not a numerical
+        accident.  Padding rows decode freely and are discarded.
+        """
+        B = int(logits.shape[0])  # padded width (>= len(reqs))
+        pos = np.asarray(pos, np.int32)
+        max_steps = max(r.max_new_tokens for r in reqs)
+        last_tok = np.zeros(B, np.int32)
+        for s in range(max_steps):
+            toks = np.array(jnp.argmax(logits, axis=-1), np.int32)  # writable copy
+            for i, r in enumerate(reqs):
+                if s < r.max_new_tokens:
+                    r.output_tokens.append(int(toks[i]))
+                    last_tok[i] = toks[i]
+                else:
+                    toks[i] = last_tok[i]
+            logits, state = step(state, jnp.asarray(toks), jnp.asarray(pos))
+            for i, r in enumerate(reqs):
+                if s + 1 < r.max_new_tokens:
+                    pos[i] += 1
+        return state
 
     # ---------------------------------------------------------------- terminal
     def _finish_ok(self, req: Request) -> Request:

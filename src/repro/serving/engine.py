@@ -1,4 +1,5 @@
-"""Claim-native KV serving engine: continuous batching over the shared core.
+"""Claim-native KV serving engine: paged zero-copy decode + continuous
+batching over the shared core.
 
 This is the runtime the paper's patched-vLLM witness *demonstrates the
 implementability of* — here built natively (DESIGN.md §2).  The decisive
@@ -11,16 +12,31 @@ property is the ordered, claim-scoped path:
   ... before terminal request-finished handling.
 
 The claim lifecycle itself lives in ``core_engine.EngineCore`` — ONE
-implementation shared with the snapshot engine; this module adds only what
-is specific to KV block chains (prefix-block storage, dense-cache assembly)
-and the execution strategy: **continuous batching** — ``run_batch`` admits
-any number of requests under claim-scoped admission, runs their restore /
-prefill phases through the shared fail-closed boundary, then decodes every
-in-flight request with ONE jitted step per token position (the jitted-step
-cache is shared across engines), preserving the per-request ordered event
-stream the analyzer checks.  ``run(req)`` is ``run_batch([req])``.
+implementation shared with the snapshot engine; this module adds what is
+specific to KV block chains and the execution strategy:
 
-The engine runs a REAL JAX model: cached/restored block payloads are the
+**Paged decode (default).**  Block payloads live in the pool's page store
+(kv_cache.BlockPool) and decode attends over them IN PLACE through
+per-request block tables (models/transformer.paged_decode_step; on TPU the
+Pallas kernel kernels/paged_attention.py).  No dense per-request cache is
+ever assembled: a reused or restored block is consumed at its page slot,
+shared prefixes occupy their pages ONCE across the whole batch, and context
+length is bounded by pool pages — not by a per-request cache shape.  Only
+the in-flight tail (trailing partial block + decoded tokens) is per-request
+state.  ``decode_mode="dense"`` keeps the previous gather-to-dense path for
+parity tests and the batch×context ceiling benchmark.
+
+**Batched prefill.**  ``run_batch`` groups fresh prompts into same-bucket
+launches (padded to the bucket length and masked by per-row valid lengths),
+so N same-bucket prompts cost ONE prefill compilation/launch instead of N.
+
+**Continuous batching.**  ``run_batch`` admits any number of requests under
+claim-scoped admission, runs restore/prefill through the shared fail-closed
+boundary, then decodes every in-flight request with ONE jitted step per
+token position (the ragged greedy loop lives in EngineCore, shared with the
+snapshot engine).  ``run(req)`` is ``run_batch([req])``.
+
+The engine runs a REAL JAX model: cached/restored page payloads are the
 bytes decode attends over, so a failed restore genuinely leaves the request
 without its claimed KV (no fallback recompute is attempted for claim-scoped
 restoration failure — that is the fail-closed semantics).
@@ -28,8 +44,10 @@ restoration failure — that is the fail-closed semantics).
 from __future__ import annotations
 
 import math
+from functools import lru_cache
 from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -60,8 +78,31 @@ __all__ = [
 ]
 
 
+@lru_cache(maxsize=16)
+def _jitted_paged_steps(bundle):
+    """Shared jitted paged prefill/decode per bundle (cross-engine cache,
+    like core_engine._jitted_steps)."""
+    if bundle.paged_decode_fn is None:
+        return None
+    return (jax.jit(bundle.prefill_collect_fn), jax.jit(bundle.paged_decode_fn))
+
+
+def _round_up(n: int, m: int) -> int:
+    """Round n up to a multiple of m (minimum m) — bounds jit recompiles
+    across batches by bucketing block-table / tail shapes."""
+    return max(m, ((n + m - 1) // m) * m)
+
+
+# Batch-width bucket: every prefill launch and decode batch is padded to a
+# multiple of this, so sequential (B=1) and batched execution run through
+# the SAME compiled executables.  XLA CPU executables can round differently
+# per compilation; sharing one executable makes batched-vs-sequential token
+# parity structural instead of a numerical accident.
+BATCH_PAD = 4
+
+
 class ServingEngine(EngineCore):
-    """Claim-native engine over KV block chains with continuous batching."""
+    """Claim-native engine over KV block chains: paged decode + batching."""
 
     kind = KVChainKind()
 
@@ -78,6 +119,7 @@ class ServingEngine(EngineCore):
         namespace: str = "default",
         host_blocks: Optional[int] = None,
         disk_dir=None,
+        decode_mode: str = "paged",
     ):
         super().__init__(
             bundle,
@@ -91,6 +133,13 @@ class ServingEngine(EngineCore):
             host_blocks=host_blocks,
             disk_dir=disk_dir,
         )
+        paged = _jitted_paged_steps(bundle)
+        if decode_mode == "paged" and paged is None:
+            decode_mode = "dense"  # int8 / non-transformer bundles
+        self.decode_mode = decode_mode
+        if paged is not None:
+            self._jit_prefill_collect, self._jit_paged_decode = paged
+        self._pages_mirror: Optional[Tuple[int, Any, Any]] = None
 
     # ------------------------------------------------------------------ claims
     def _claims_covering_block(self, chain: str, block_index: int) -> Set[str]:
@@ -120,6 +169,8 @@ class ServingEngine(EngineCore):
 
     # ------------------------------------------------------------ cache plumbing
     def _dense_cache(self, blocks: List[KVBlock], batch: int = 1):
+        """Gather-to-dense assembly (decode_mode="dense" only): copies every
+        block payload into a per-request contiguous cache."""
         cache = self.bundle.make_cache(batch, self.cache_len)
         if not blocks:
             return cache, 0
@@ -132,36 +183,84 @@ class ServingEngine(EngineCore):
         cache["pos"] = cache["pos"].at[0, :n].set(jnp.asarray(pos))
         return cache, n
 
-    def _store_prefix_blocks(self, req: Request, cache, upto: int) -> List[KVBlock]:
-        """Slice the request's prefill KV into reusable prompt blocks."""
-        created = []
+    def _device_pages(self) -> Tuple[Any, Any]:
+        """jnp mirror of the pool page store, rebuilt only when pages change
+        (version-keyed).  On the TPU target the page store IS device memory
+        and this is the identity."""
+        pool = self.pool
+        ver = pool._pages_version if pool.k_pages is not None else -1
+        if self._pages_mirror is None or self._pages_mirror[0] != ver:
+            if pool.k_pages is None:
+                cfg = self.cfg
+                z = jnp.zeros(
+                    (cfg.num_layers, cfg.num_kv_heads, 1, self.block_size, cfg.resolved_head_dim),
+                    jnp.bfloat16,
+                )
+                self._pages_mirror = (ver, z, z)
+            else:
+                self._pages_mirror = (
+                    ver,
+                    jnp.asarray(pool.k_pages),
+                    jnp.asarray(pool.v_pages),
+                )
+        return self._pages_mirror[1], self._pages_mirror[2]
+
+    def _store_prefix_blocks(
+        self, req: Request, ck, cv, upto: int, *, start: int = 0, pin: bool = True
+    ) -> List[KVBlock]:
+        """Slice a request's KV into reusable pool pages.
+
+        ck/cv: [L, S, KV, Dh] (numpy or jnp) — the request's KV for token
+        positions ``start..upto`` (``start`` must be block-aligned; blocks
+        before it are assumed resident and are skipped, their chain hashes
+        still folded in).
+
+        With ``pin=True`` (requires start=0) returns the request's full
+        block chain covering ``upto``, every block PINNED (ref+1): a later
+        allocation in the same batch must not evict a page this request's
+        block table will attend.  The caller unpins after decode.  On
+        PoolExhausted the partial pins are unwound before re-raising.
+        """
+        assert not (pin and start), "a pinned chain must start at block 0"
+        chain: List[KVBlock] = []
         h = ""
         protected = self.scheduler.protected_claim_ids()
-        ck = np.asarray(cache["k"][:, 0])  # [L, S, KV, Dh]
-        cv = np.asarray(cache["v"][:, 0])
-        for bi in range(upto // self.block_size):
-            lo, hi = bi * self.block_size, (bi + 1) * self.block_size
-            btoks = req.tokens[lo:hi]
-            h = chain_hash(h, btoks)
-            if h in self.pool.prefix_index:
-                continue  # already resident (shared prefix)
-            claim_ids = self._claims_covering_block(h, bi)
-            prio = max(
-                [self.registry.get(c).priority for c in claim_ids],
-                default=0,
-            )
-            blk = self.pool.add_block(
-                btoks,
-                h,
-                ck[:, lo:hi],
-                cv[:, lo:hi],
-                np.arange(lo, hi),
-                priority=prio,
-                claim_ids=claim_ids,
-                protected_claims=protected,
-            )
-            created.append(blk)
-        return created
+        ck = np.asarray(ck)
+        cv = np.asarray(cv)
+        try:
+            for bi in range(upto // self.block_size):
+                lo, hi = bi * self.block_size, (bi + 1) * self.block_size
+                btoks = req.tokens[lo:hi]
+                h = chain_hash(h, btoks)
+                if lo < start:
+                    continue
+                bid = self.pool.prefix_index.get(h)
+                if bid is not None:  # already resident (shared prefix)
+                    blk = self.pool.blocks[bid]
+                else:
+                    claim_ids = self._claims_covering_block(h, bi)
+                    prio = max(
+                        [self.registry.get(c).priority for c in claim_ids],
+                        default=0,
+                    )
+                    blk = self.pool.add_block(
+                        btoks,
+                        h,
+                        ck[:, lo - start : hi - start],
+                        cv[:, lo - start : hi - start],
+                        np.arange(lo, hi),
+                        priority=prio,
+                        claim_ids=claim_ids,
+                        protected_claims=protected,
+                    )
+                if pin:
+                    blk.ref += 1
+                    chain.append(blk)
+        except PoolExhausted:
+            for b in chain:
+                b.ref -= 1
+            raise
+        return chain
 
     def _materialize_claims(self, req: Request, materialized_tokens: int) -> None:
         """Named observation point: prefill_complete."""
@@ -182,24 +281,32 @@ class ServingEngine(EngineCore):
                     request_id=req.request_id,
                 )
 
-    # ---------------------------------------------------------------- execution
-    def run(self, req: Request) -> Request:
-        """Execute a request to completion (prefill + greedy decode)."""
-        return self.run_batch([req])[0]
+    # ---------------------------------------------------------------- admission
+    def _admit_and_restore(self, req: Request) -> Optional[List[KVBlock]]:
+        """Admission + restore-before-reuse for one request.
 
-    def _prepare(self, req: Request) -> Optional[Dict[str, Any]]:
-        """Admission + restore + prefill for one request.
-
-        Returns a decode entry {req, cache, logits, pos} for requests that
-        reach the decode phase, or None when the request already terminated
-        (admission refusal or fail-closed restoration outcome).  The claim
-        lifecycle here is entirely the shared EngineCore implementation.
+        Returns the device-resident prefix blocks (possibly empty) when the
+        request may proceed to prefill/decode, or None when it already
+        terminated (admission refusal or fail-closed restoration outcome).
+        The claim lifecycle here is entirely the shared EngineCore
+        implementation.
         """
         req.status = "running"
-        total_needed = math.ceil((len(req.tokens) + req.max_new_tokens) / self.block_size)
+
+        # --- device-resident prefix reuse (event-free index walk) ---
+        dev_blocks = self.pool.lookup_prefix(req.tokens, self.block_size)
 
         # --- explicit active/resident conflict action (admission) ---
-        refusal = self.scheduler.admission_check(req, total_needed)
+        if self.decode_mode == "paged":
+            # paged: decode tokens live in the tail, not in pool pages, and
+            # already-resident blocks are shared — only missing full prompt
+            # blocks need pages
+            needed = len(req.tokens) // self.block_size - len(dev_blocks)
+        else:
+            needed = math.ceil(
+                (len(req.tokens) + req.max_new_tokens) / self.block_size
+            )
+        refusal = self.scheduler.admission_check(req, needed)
         if refusal is not None:
             req.status = "refused"
             req.error = refusal.reason
@@ -207,9 +314,6 @@ class ServingEngine(EngineCore):
                 "request_finished", request_id=req.request_id, status="REFUSED_ADMISSION"
             )
             return None
-
-        # --- device-resident prefix reuse ---
-        dev_blocks = self.pool.lookup_prefix(req.tokens, self.block_size)
 
         # --- off-device (offloaded) continuation: restore-before-reuse ---
         hit_blocks = self.connector.lookup(
@@ -224,9 +328,209 @@ class ServingEngine(EngineCore):
                 return None
             dev_blocks = self.pool.lookup_prefix(req.tokens, self.block_size)
 
-        # --- prefill (reused blocks are NOT recomputed) ---
+        req.cached_tokens = sum(len(b.tokens) for b in dev_blocks)
+        return dev_blocks
+
+    # ------------------------------------------------------------- paged phase
+    def _make_paged_state(
+        self,
+        blocks_per_req: List[List[KVBlock]],
+        plens: List[int],
+        tail_cap: int,
+        tails: Optional[List[Optional[Dict[str, Any]]]] = None,
+        pages: Optional[Tuple[Any, Any]] = None,
+    ) -> Dict[str, Any]:
+        """Assemble the jitted paged-decode state: pool pages + per-request
+        block tables + in-flight tails.
+
+        ``pages`` lets run_batch share ONE mirror across every continuation
+        feed in a batch (their stores only add pages no current block table
+        references), instead of re-uploading the pool per request.
+        """
+        B = len(blocks_per_req)
+        jk, jv = pages if pages is not None else self._device_pages()
+        L, KV, _, page, Dh = jk.shape
+        P = _round_up(max((len(bl) for bl in blocks_per_req), default=0), 4)
+        bt = np.zeros((B, P), np.int32)
+        for i, bl in enumerate(blocks_per_req):
+            pt = self.pool.page_table(bl)
+            bt[i, : len(pt)] = pt
+        tk = np.zeros((L, B, tail_cap, KV, Dh), jk.dtype)
+        tv = np.zeros_like(tk)
+        tpos = np.full((B, tail_cap), -1, np.int32)
+        if tails is not None:
+            for i, t in enumerate(tails):
+                if t is None:
+                    continue
+                n = t["k"].shape[1]
+                tk[:, i, :n] = t["k"]
+                tv[:, i, :n] = t["v"]
+                tpos[i, :n] = t["pos"]
+        return {
+            "k_pages": jk,
+            "v_pages": jv,
+            "block_tables": jnp.asarray(bt),
+            "prefix_len": jnp.asarray(np.asarray(plens, np.int32)),
+            "k_tail": jnp.asarray(tk),
+            "v_tail": jnp.asarray(tv),
+            "tail_pos": jnp.asarray(tpos),
+        }
+
+    def _paged_entry(self, req: Request, blocks: List[KVBlock], plen: int,
+                     tail_k, tail_v, tail_pos, logits) -> Dict[str, Any]:
+        # blocks arrive PINNED (ref already held by the caller the moment
+        # each block became part of the request's chain); run_batch unpins
+        # after decode
+        return {
+            "req": req,
+            "blocks": blocks,
+            "plen": plen,
+            "tail_k": tail_k,  # [L, t, KV, Dh] numpy (may be empty)
+            "tail_v": tail_v,
+            "tail_pos": tail_pos,  # [t] absolute positions
+            "logits": logits,  # [V]
+            "pos": len(req.tokens),
+        }
+
+    def _continue_paged(
+        self,
+        req: Request,
+        dev_blocks: List[KVBlock],
+        pages: Optional[Tuple[Any, Any]] = None,
+    ) -> Dict[str, Any]:
+        """Prefill-continuation over a (restored) block prefix: feed the
+        uncached tokens through the paged step — reused pages are consumed
+        IN PLACE, nothing is re-assembled or recomputed."""
+        toks = req.tokens
+        n = len(toks)
         cached = sum(len(b.tokens) for b in dev_blocks)
-        req.cached_tokens = cached
+        blocks = list(dev_blocks)
+        # pin the chain BEFORE any allocation below: a same-batch store must
+        # not evict a page this request's block table attends
+        for b in blocks:
+            b.ref += 1
+        try:
+            if cached == n:
+                # exact-prefix hit: replay the last token through the tail
+                # (its logits pick the first output token) and mask it out
+                # of the page side so the position is not double-counted
+                plen, feed = n - 1, toks[n - 1 :]
+            else:
+                plen, feed = cached, toks[cached:]
+            tail_cap = _round_up(n - plen + req.max_new_tokens, 8)
+            state = self._make_paged_state(
+                [blocks] * BATCH_PAD, [plen] * BATCH_PAD, tail_cap, pages=pages
+            )
+            logits = None
+            for i, tok in enumerate(feed):
+                lg, state = self._jit_paged_decode(
+                    self.params,
+                    state,
+                    jnp.asarray([tok] * BATCH_PAD, jnp.int32),
+                    jnp.asarray([plen + i] * BATCH_PAD, jnp.int32),
+                )
+                logits = lg[0]
+            t_used = n - plen
+            tail_k = np.asarray(state["k_tail"])[:, 0, :t_used]
+            tail_v = np.asarray(state["v_tail"])[:, 0, :t_used]
+            tail_pos = np.arange(plen, n)
+            if cached < n:
+                # freshly computed full blocks become reusable pool pages
+                nb_new = n // self.block_size - cached // self.block_size
+                if nb_new > 0:
+                    lo = cached // self.block_size * self.block_size
+                    # tail slots for positions lo..: (position - plen)
+                    ks = tail_k[:, lo - plen : lo - plen + nb_new * self.block_size]
+                    vs = tail_v[:, lo - plen : lo - plen + nb_new * self.block_size]
+                    self._store_prefix_blocks(
+                        req, ks, vs, lo + nb_new * self.block_size,
+                        start=lo, pin=False,
+                    )
+            # the named observation point applies to exact-prefix hits too:
+            # a claim accepted after its prefix became resident must still
+            # materialize here (matching the dense path)
+            self._materialize_claims(req, n - n % self.block_size)
+        except BaseException:
+            for b in blocks:
+                b.ref -= 1
+            raise
+        return self._paged_entry(req, blocks, plen, tail_k, tail_v, tail_pos, logits)
+
+    def _prefill_bucket(self, reqs: List[Request]) -> List[Dict[str, Any]]:
+        """ONE shared prefill launch for a bucket of fresh prompts: padded to
+        the bucket length, masked by per-row valid lengths."""
+        B = _round_up(len(reqs), BATCH_PAD)  # padding rows replicate row 0
+        lens = [len(r.tokens) for r in reqs]
+        lens += [lens[0]] * (B - len(reqs))
+        S = _round_up(max(lens), self.block_size)
+        tokens = np.zeros((B, S), np.int32)
+        for i in range(B):
+            r = reqs[i] if i < len(reqs) else reqs[0]
+            tokens[i, : len(r.tokens)] = r.tokens
+        logits, ck, cv = self._jit_prefill_collect(
+            self.params,
+            {
+                "tokens": jnp.asarray(tokens),
+                "valid_len": jnp.asarray(np.asarray(lens, np.int32)),
+            },
+        )
+        ck = np.asarray(ck)  # [L, B, S, KV, Dh]
+        cv = np.asarray(cv)
+        stored: List[Tuple[Request, List[KVBlock]]] = []
+        for i, req in enumerate(reqs):
+            n = lens[i]
+            try:
+                blocks = self._store_prefix_blocks(req, ck[:, i], cv[:, i], n)
+            except PoolExhausted as e:
+                self._refuse_allocation(req, e)
+                continue
+            self._materialize_claims(req, n - n % self.block_size)
+            stored.append((req, blocks))
+        # Entry state (tail KV + pre-decode logits) comes from the SAME
+        # paged feed the continuation path uses, over the just-stored pages.
+        # A fresh prefill and a later restored continuation of the same
+        # prompt therefore run the SAME executable over bitwise-identical
+        # pages — restored-vs-cold greedy parity is structural, not a
+        # numerical accident of prefill-vs-decode GEMM rounding.
+        entries = []
+        pages = self._device_pages() if stored else None
+        for req, blocks in stored:
+            try:
+                entries.append(self._continue_paged(req, blocks, pages))
+            finally:
+                for b in blocks:
+                    b.ref -= 1  # release store-time pins; the entry holds its own
+        return entries
+
+    def _decode_paged(self, entries: List[Dict[str, Any]]) -> None:
+        """Paged continuous-batched greedy decode: every step attends each
+        request's pool pages through its block table — shared prefix pages
+        are read in place ONCE for the whole batch."""
+        reqs = [e["req"] for e in entries]
+        tail_cap = _round_up(
+            max(e["pos"] - e["plen"] + e["req"].max_new_tokens for e in entries), 8
+        )
+        # pad to the batch-width bucket (rows replicate entry 0; discarded)
+        pad = [entries[0]] * (_round_up(len(entries), BATCH_PAD) - len(entries))
+        rows = entries + pad
+        state = self._make_paged_state(
+            [e["blocks"] for e in rows],
+            [e["plen"] for e in rows],
+            tail_cap,
+            tails=[
+                {"k": e["tail_k"], "v": e["tail_v"], "pos": e["tail_pos"]}
+                for e in rows
+            ],
+        )
+        logits = jnp.stack([e["logits"] for e in rows])  # [B_pad, V]
+        step = lambda s, t, p: self._jit_paged_decode(self.params, s, t, p)
+        self._greedy_decode_loop(reqs, state, logits, [e["pos"] for e in rows], step)
+
+    # ------------------------------------------------------------- dense phase
+    def _prepare_dense(self, req: Request, dev_blocks: List[KVBlock]) -> Optional[Dict[str, Any]]:
+        """Dense-assembly prefill (decode_mode="dense"): gathers the block
+        chain into a contiguous per-request cache."""
+        cached = req.cached_tokens
         for b in dev_blocks:
             b.ref += 1
         try:
@@ -254,7 +558,12 @@ class ServingEngine(EngineCore):
                         jnp.asarray([len(req.tokens) - 1], jnp.int32),
                     )
                     logits = lg[0]
-            self._store_prefix_blocks(req, cache, len(req.tokens))
+            ck = np.asarray(cache["k"][:, 0])  # [L, S, KV, Dh]
+            cv = np.asarray(cache["v"][:, 0])
+            # dense decode owns a private cache copy, so the pins taken by
+            # the store (to protect the chain mid-store) release right away
+            for b in self._store_prefix_blocks(req, ck, cv, len(req.tokens)):
+                b.ref -= 1
             self._materialize_claims(
                 req, len(req.tokens) - len(req.tokens) % self.block_size
             )
@@ -277,47 +586,58 @@ class ServingEngine(EngineCore):
             out[key] = jnp.concatenate([c[key] for c in caches], axis=axis)
         return out
 
-    def _decode_sequential(self, entry: Dict[str, Any]) -> None:
-        """Single-request greedy decode (the B=1 fast path — identical event
-        and compute stream to the pre-batching engine)."""
-        req, cache, logits, pos = entry["req"], entry["cache"], entry["logits"], entry["pos"]
-        for _ in range(req.max_new_tokens):
-            tok = int(jnp.argmax(logits))
-            req.output_tokens.append(tok)
-            lg, cache = self._jit_decode(
-                self.params, cache, jnp.asarray([tok], jnp.int32), jnp.asarray([pos], jnp.int32)
-            )
-            logits = lg[0]
-            pos += 1
-
-    def _decode_batched(self, entries: List[Dict[str, Any]]) -> None:
-        """Continuous-batched greedy decode: ONE jitted step per position for
-        every in-flight request (vs one step per request per position)."""
-        B = len(entries)
+    def _decode_dense(self, entries: List[Dict[str, Any]]) -> None:
+        reqs = [e["req"] for e in entries]
         cache = self._stack_caches([e["cache"] for e in entries])
         logits = jnp.stack([e["logits"] for e in entries])  # [B, V]
-        pos = np.asarray([e["pos"] for e in entries], np.int32)
-        reqs = [e["req"] for e in entries]
-        max_steps = max(r.max_new_tokens for r in reqs)
-        last_tok = np.zeros(B, np.int32)
-        for step in range(max_steps):
-            toks = np.array(jnp.argmax(logits, axis=-1), np.int32)  # writable copy
-            for i, r in enumerate(reqs):
-                if step < r.max_new_tokens:
-                    r.output_tokens.append(int(toks[i]))
-                    last_tok[i] = toks[i]
-                else:
-                    # finished rows re-feed their last token at a frozen
-                    # position: a no-op replay that keeps the batch dense
-                    toks[i] = last_tok[i]
-            lg, cache = self._jit_decode(
-                self.params, cache, jnp.asarray(toks), jnp.asarray(pos)
-            )
-            logits = lg
-            for i, r in enumerate(reqs):
-                if step + 1 < r.max_new_tokens:
-                    pos[i] += 1
-        return None
+        step = lambda c, t, p: self._jit_decode(self.params, c, t, p)
+        self._greedy_decode_loop(reqs, cache, logits, [e["pos"] for e in entries], step)
+
+    # ---------------------------------------------------------------- execution
+    def _refuse_allocation(self, req: Request, e: PoolExhausted) -> None:
+        """Mid-prefill allocation hit protected-claim blocks: refuse THIS
+        request with blocking-claim attribution (per-request isolation)."""
+        req.status = "refused"
+        req.error = str(e)
+        self.events.emit(
+            "scheduler_admission_refused",
+            request_id=req.request_id,
+            blocking_claim_ids=e.blocking_claim_ids,
+            conflict_action="refuse",
+            stage="allocation",
+        )
+        self.events.emit(
+            "request_finished",
+            request_id=req.request_id,
+            status="REFUSED_ADMISSION",
+        )
+
+    def run(self, req: Request) -> Request:
+        """Execute a request to completion (prefill + greedy decode)."""
+        return self.run_batch([req])[0]
+
+    def prefill_logits(self, tokens: Sequence[int], max_new_tokens: int = 1) -> np.ndarray:
+        """Admission + restore + prefill for one request, returning its
+        pre-decode logits [V] as float32 numpy — the comparison surface for
+        parity tests and benches.  Block pins are balanced internally; the
+        request is left un-decoded."""
+        req = self.submit(tokens, max_new_tokens=max_new_tokens)
+        dev = self._admit_and_restore(req)
+        if dev is None:
+            raise RuntimeError(f"request terminated: {req.status} ({req.error})")
+        if self.decode_mode != "paged":
+            entry = self._prepare_dense(req, dev)
+            return np.asarray(entry["logits"], np.float32)
+        if req.cached_tokens:
+            entry = self._continue_paged(req, dev)
+        else:
+            entries = self._prefill_bucket([req])
+            if not entries:  # refused at the allocation stage
+                raise RuntimeError(f"request terminated: {req.status} ({req.error})")
+            entry = entries[0]
+        for b in entry["blocks"]:
+            b.ref -= 1
+        return np.asarray(entry["logits"], np.float32)
 
     def run_batch(self, reqs: Sequence[Request]) -> List[Request]:
         """Continuous batching: admit, restore and prefill each request under
@@ -338,35 +658,62 @@ class ServingEngine(EngineCore):
                 batch_size=len(reqs),
                 request_ids=[r.request_id for r in reqs],
             )
-        entries = []
+        entries: List[Dict[str, Any]] = []
+        pending_prefill: List[Request] = []
+        pending_continue: List[Tuple[Request, List[KVBlock]]] = []
+        paged = self.decode_mode == "paged"
+        # --- phase 1: admission + restore for every request --------------
         for req in reqs:
             try:
-                entry = self._prepare(req)
+                dev_blocks = self._admit_and_restore(req)
+                if dev_blocks is None:
+                    continue
+                if not paged:
+                    entry = self._prepare_dense(req, dev_blocks)
+                    if entry is not None:
+                        entries.append(entry)
+                elif req.cached_tokens == 0:
+                    pending_prefill.append(req)  # bucketed shared launch below
+                else:
+                    # pin immediately: an earlier batch-mate's store must not
+                    # evict this request's prefix before its turn comes
+                    for b in dev_blocks:
+                        b.ref += 1
+                    pending_continue.append((req, dev_blocks))
             except PoolExhausted as e:
-                # mid-prefill/restore allocation hit protected-claim blocks:
-                # refuse THIS request with blocking-claim attribution and keep
-                # the rest of the batch running (per-request isolation)
-                req.status = "refused"
-                req.error = str(e)
-                self.events.emit(
-                    "scheduler_admission_refused",
-                    request_id=req.request_id,
-                    blocking_claim_ids=e.blocking_claim_ids,
-                    conflict_action="refuse",
-                    stage="allocation",
-                )
-                self.events.emit(
-                    "request_finished",
-                    request_id=req.request_id,
-                    status="REFUSED_ADMISSION",
-                )
+                self._refuse_allocation(req, e)
                 continue
-            if entry is not None:
-                entries.append(entry)
-        if len(entries) == 1:
-            self._decode_sequential(entries[0])
-        elif entries:
-            self._decode_batched(entries)
+        # --- phase 2: prefill (continuations feed against ONE pages mirror:
+        # their stores only add pages no current block table references) ---
+        if pending_continue:
+            pages = self._device_pages()
+            for req, dev_blocks in pending_continue:
+                for b in dev_blocks:
+                    b.ref -= 1  # hand the pin over to _continue_paged's own
+                try:
+                    entries.append(self._continue_paged(req, dev_blocks, pages))
+                except PoolExhausted as e:
+                    self._refuse_allocation(req, e)
+        if pending_prefill:
+            # same-bucket prompts share one padded+masked prefill launch
+            buckets: Dict[int, List[Request]] = {}
+            for req in pending_prefill:
+                buckets.setdefault(
+                    _round_up(len(req.tokens), self.block_size), []
+                ).append(req)
+            for _, bucket in sorted(buckets.items()):
+                entries.extend(self._prefill_bucket(bucket))
+        try:
+            if entries:
+                if paged:
+                    self._decode_paged(entries)
+                else:
+                    self._decode_dense(entries)
+        finally:
+            if paged:
+                for e in entries:
+                    for b in e["blocks"]:
+                        b.ref -= 1
         for entry in entries:
             self._finish_ok(entry["req"])
         return reqs

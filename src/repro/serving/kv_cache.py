@@ -48,6 +48,7 @@ class KVBlock:
     priority: int = 0
     claim_ids: Set[str] = field(default_factory=set)
     last_use: float = 0.0
+    page_index: Optional[int] = None  # slot in the device page store, if paged
     _released_nbytes: int = 0  # payload size while spilled (k/v are None)
 
     @property
@@ -61,6 +62,16 @@ class KVBlock:
         self._released_nbytes = self.nbytes
         self.k = None
         self.v = None
+
+    def detach_payload(self) -> None:
+        """Replace page-store views with owned copies (before the page slot
+        is freed for reuse — a stale view would alias the next tenant)."""
+        if self.page_index is not None:
+            if self.k is not None:
+                self.k = np.array(self.k)
+            if self.v is not None:
+                self.v = np.array(self.v)
+            self.page_index = None
 
     def restore_payload(self, k: np.ndarray, v: np.ndarray, positions: np.ndarray) -> None:
         self.k = np.asarray(k)
@@ -76,13 +87,24 @@ class PoolExhausted(RuntimeError):
 
 
 class BlockPool:
-    """Device-side block pool with claim-aware victim selection.
+    """Device-side block pool with claim-aware victim selection and a paged
+    backing store.
 
     Eviction order: unreferenced blocks sorted by (priority asc, LRU).
     Blocks belonging to *protected* claims are excluded from the victim set
     (victim_exclusion_before_violation); if demand still cannot be met the
     allocator raises ``PoolExhausted`` carrying the blocking claim ids so the
     scheduler can take its explicit conflict action.
+
+    Page store: KV payloads with the canonical [L, block_size, KV, Dh] shape
+    live in ONE pair of pool-wide page arrays ``k_pages``/``v_pages`` of
+    shape [L, KV, capacity, block_size, Dh] — the layout the paged-attention
+    kernel consumes directly (kernels/paged_attention.py).  A block's ``k``/
+    ``v`` are zero-copy views of its page slot, so decode attends over the
+    pool IN PLACE through per-request block tables: no dense per-request
+    cache is ever assembled, and a restored/promoted block is usable the
+    moment its payload lands in a slot.  Payloads with other shapes (state
+    snapshots) bypass the page store and own their arrays.
     """
 
     def __init__(self, capacity_blocks: int, event_log, clock=time.monotonic):
@@ -93,6 +115,64 @@ class BlockPool:
         self._next_id = 0
         # chain hash -> block_id for device-resident reusable blocks
         self.prefix_index: Dict[str, int] = {}
+        # paged backing store (lazily shaped from the first block payload)
+        self.k_pages: Optional[np.ndarray] = None  # [L, KV, N, page, Dh]
+        self.v_pages: Optional[np.ndarray] = None
+        self._free_pages: List[int] = []
+        self._pages_version = 0  # bumped on any page write (jnp mirror key)
+
+    # -- page store -----------------------------------------------------------
+    @staticmethod
+    def _pageable(k, v) -> bool:
+        return (
+            k is not None
+            and v is not None
+            and getattr(k, "ndim", 0) == 4
+            and getattr(v, "ndim", 0) == 4
+            and k.shape == v.shape
+        )
+
+    def _ensure_pages(self, k: np.ndarray) -> None:
+        if self.k_pages is not None:
+            return
+        L, bs, KV, Dh = k.shape
+        shape = (L, KV, self.capacity, bs, Dh)
+        self.k_pages = np.zeros(shape, k.dtype)
+        self.v_pages = np.zeros(shape, k.dtype)
+        self._free_pages = list(range(self.capacity - 1, -1, -1))
+
+    def _page_in(self, blk: KVBlock, k: np.ndarray, v: np.ndarray) -> None:
+        """Land a payload in a free page slot; blk.k/v become views of it."""
+        self._ensure_pages(k)
+        L, KV, _, bs, Dh = self.k_pages.shape
+        if k.shape != (L, bs, KV, Dh) or not self._free_pages:
+            # shape drift (should not happen within one engine): own arrays
+            blk.k, blk.v = np.asarray(k), np.asarray(v)
+            return
+        pi = self._free_pages.pop()
+        self.k_pages[:, :, pi] = np.transpose(k, (0, 2, 1, 3))
+        self.v_pages[:, :, pi] = np.transpose(v, (0, 2, 1, 3))
+        blk.page_index = pi
+        # zero-copy views back in [L, block_size, KV, Dh] layout
+        blk.k = self.k_pages[:, :, pi].transpose(0, 2, 1, 3)
+        blk.v = self.v_pages[:, :, pi].transpose(0, 2, 1, 3)
+        self._pages_version += 1
+
+    def _page_out(self, blk: KVBlock) -> None:
+        if blk.page_index is not None:
+            pi = blk.page_index
+            blk.detach_payload()
+            self._free_pages.append(pi)
+            self._pages_version += 1
+
+    def page_table(self, blocks: Sequence[KVBlock]) -> List[int]:
+        """Page indices for a block chain (the per-request block table)."""
+        out = []
+        for b in blocks:
+            if b.page_index is None:
+                raise ValueError(f"block {b.block_id} is not page-resident")
+            out.append(b.page_index)
+        return out
 
     # -- capacity -------------------------------------------------------------
     @property
@@ -123,21 +203,40 @@ class BlockPool:
             block_id=self._next_id,
             tokens=tuple(int(t) for t in tokens),
             chain=chain,
-            k=np.asarray(k),
-            v=np.asarray(v),
+            k=None,
+            v=None,
             positions=np.asarray(positions),
             priority=priority,
             claim_ids=set(claim_ids or ()),
             last_use=self._clock(),
         )
+        k, v = np.asarray(k), np.asarray(v)
+        if self._pageable(k, v):
+            self._page_in(blk, k, v)
+        else:
+            blk.k, blk.v = k, v
         self._next_id += 1
         self.blocks[blk.block_id] = blk
         self.prefix_index[chain] = blk.block_id
         self._events.emit("block_stored", block_id=blk.block_id, chain=chain, n_tokens=len(tokens))
         return blk
 
+    def readmit(self, blk: KVBlock) -> KVBlock:
+        """Re-admit a restored block: its payload lands directly in a page
+        slot (restore lands BLOCKS, not dense slabs) and becomes attendable
+        in place via block tables."""
+        blk.location = "device"
+        blk.last_use = self._clock()
+        k, v = blk.k, blk.v
+        if self._pageable(k, v):
+            self._page_in(blk, np.asarray(k), np.asarray(v))
+        self.blocks[blk.block_id] = blk
+        self.prefix_index[blk.chain] = blk.block_id
+        return blk
+
     def remove(self, block_id: int, reason: str = "evicted") -> KVBlock:
         blk = self.blocks.pop(block_id)
+        self._page_out(blk)
         if self.prefix_index.get(blk.chain) == block_id:
             del self.prefix_index[blk.chain]
         self._events.emit("block_removed", block_id=block_id, chain=blk.chain, reason=reason)

@@ -276,11 +276,12 @@ class OffloadingConnector:
                             from_tier=src_name,
                             to_tier="device",
                         )
-                    blk.location = "device"
                     if self.device.free_slots <= 0:
                         self.device.evict(1, protected_claims=protected_claims or set())
-                    self.device.blocks[blk.block_id] = blk
-                    self.device.prefix_index[blk.chain] = blk.block_id
+                    # restore lands the BLOCK in a device page slot: the
+                    # payload becomes attendable in place through block
+                    # tables, with no dense-slab assembly step
+                    self.device.readmit(blk)
                     self._events.emit(
                         "offload_worker_transfer_finished",
                         request_id=job.request_id,

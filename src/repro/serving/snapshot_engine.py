@@ -21,7 +21,8 @@ matches the never-offloaded run (tests/test_snapshot_claims.py).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Sequence, Tuple
+from functools import lru_cache
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -53,6 +54,23 @@ def _unpack_state(payload: np.ndarray, meta):
         leaves.append(payload[off : off + n].view(dtype).reshape(shape))
         off += n
     return jax.tree.unflatten(treedef, [jnp.asarray(l) for l in leaves])
+
+
+@lru_cache(maxsize=16)
+def _state_batch_axes(bundle):
+    """Per-leaf batch axis of this bundle's recurrent state, inferred by
+    comparing B=1 and B=2 state shapes (xLSTM states carry batch on axis 2
+    behind the [G, n_blocks] stack; hybrid caches mix axes 0 and 1)."""
+    s1 = jax.eval_shape(lambda: bundle.make_cache(1, 8))
+    s2 = jax.eval_shape(lambda: bundle.make_cache(2, 8))
+
+    def axis(a, b):
+        for i, (x, y) in enumerate(zip(a.shape, b.shape)):
+            if x != y:
+                return i
+        return 0
+
+    return jax.tree.map(axis, s1, s2)
 
 
 class SnapshotEngine(EngineCore):
@@ -126,10 +144,14 @@ class SnapshotEngine(EngineCore):
         return blk
 
     # -- serve ------------------------------------------------------------------
-    def serve(self, tokens: Sequence[int], max_new_tokens: int = 2) -> Request:
-        """Serve a request whose prefix may hit a snapshot claim."""
-        toks = tuple(int(t) for t in tokens)
-        req = self._new_request(toks, max_new_tokens)
+    def _prepare_serve(self, req: Request):
+        """Restore/prefill for one request: the per-request half of the
+        decode pipeline (ordered, claim-scoped events preserved).
+
+        Returns None when the request already terminated at the fail-closed
+        restore boundary, else {req, state [B=1 pytree], logits [V], pos}.
+        """
+        toks = req.tokens
         claims = self._matching_claims(toks)
 
         state = None
@@ -148,7 +170,7 @@ class SnapshotEngine(EngineCore):
                     # scheduler outcome — identical code to the KV path.
                     restore_claims = [claim] if claim.state == ClaimState.OFFLOADED else []
                     if not self._restore_for_request(req, [hit], restore_claims):
-                        return req
+                        return None
                     dev_bid = self.pool.prefix_index.get(chain)
             if dev_bid is not None:
                 blk = self.pool.blocks[dev_bid]
@@ -170,13 +192,68 @@ class SnapshotEngine(EngineCore):
                     jnp.asarray([consumed + i], jnp.int32),
                 )
                 logits = lg[0]
-        pos = len(toks)
-        for _ in range(max_new_tokens):
-            tok = int(jnp.argmax(logits))
-            req.output_tokens.append(tok)
-            lg, state = self._jit_decode(
-                self.params, state, jnp.asarray([tok], jnp.int32), jnp.asarray([pos], jnp.int32)
+        return {"req": req, "state": state, "logits": logits, "pos": len(toks)}
+
+    def _stack_states(self, states: List[Any]):
+        """Concatenate B single-request recurrent states along each leaf's
+        batch axis (inferred once per bundle)."""
+        if len(states) == 1:
+            return states[0]
+        axes = _state_batch_axes(self.bundle)
+        return jax.tree.map(
+            lambda ax, *leaves: jnp.concatenate(leaves, axis=ax), axes, *states
+        )
+
+    def serve(self, tokens: Sequence[int], max_new_tokens: int = 2) -> Request:
+        """Serve a request whose prefix may hit a snapshot claim."""
+        return self.serve_batch([tokens], max_new_tokens=max_new_tokens)[0]
+
+    def serve_batch(
+        self, token_seqs: Sequence[Sequence[int]], max_new_tokens: int = 2
+    ) -> List[Request]:
+        """Continuous-batched snapshot serving: per-request restore/prefill
+        through the shared fail-closed boundary, then ONE jitted step per
+        token position for all survivors — recurrent states stacked on the
+        batch axis through the SAME ragged greedy loop as the KV engine
+        (EngineCore._greedy_decode_loop)."""
+        self.scheduler.sweep_expiry()
+        reqs = [
+            self._new_request(tuple(int(t) for t in toks), max_new_tokens)
+            for toks in token_seqs
+        ]
+        if len(reqs) > 1:
+            self.events.emit(
+                "batch_scheduled",
+                batch_size=len(reqs),
+                request_ids=[r.request_id for r in reqs],
             )
-            logits = lg[0]
-            pos += 1
-        return self._finish_ok(req)
+        entries = []
+        for req in reqs:
+            entry = self._prepare_serve(req)
+            if entry is not None:
+                entries.append(entry)
+        if entries:
+            # multi-request batches pad to the batch-width bucket so every
+            # batched width shares one compiled step (see engine.BATCH_PAD);
+            # B=1 keeps its natural width — serve() stays bit-compatible
+            # with the original single-request path
+            from repro.serving.engine import BATCH_PAD, _round_up
+
+            rows = entries
+            if len(entries) > 1:
+                rows = entries + [entries[0]] * (
+                    _round_up(len(entries), BATCH_PAD) - len(entries)
+                )
+            state = self._stack_states([e["state"] for e in rows])
+            logits = jnp.stack([e["logits"] for e in rows])  # [B_pad, V]
+            step = lambda s, t, p: self._jit_decode(self.params, s, t, p)
+            self._greedy_decode_loop(
+                [e["req"] for e in entries],
+                state,
+                logits,
+                [e["pos"] for e in rows],
+                step,
+            )
+        for e in entries:
+            self._finish_ok(e["req"])
+        return reqs

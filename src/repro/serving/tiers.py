@@ -51,6 +51,9 @@ class HostTier:
         return self.capacity is not None and self.used > self.capacity
 
     def put(self, blk: KVBlock) -> None:
+        # A block arriving from the device pool may still be a view of its
+        # (now freed) page slot: take ownership of the bytes host-side.
+        blk.detach_payload()
         blk.location = self.name
         self.blocks[blk.block_id] = blk
         self.by_chain[blk.chain] = blk.block_id

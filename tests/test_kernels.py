@@ -127,6 +127,77 @@ def test_paged_attention_matches_dense_decode():
     )
 
 
+# ------------------------------------------------- paged decode (serving entry)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,KV,G,D,page,P,N,T,window",
+    [
+        (2, 2, 2, 16, 4, 4, 16, 8, 0),
+        (1, 4, 1, 32, 8, 3, 8, 4, 0),
+        (3, 1, 4, 16, 4, 5, 32, 8, 12),  # sliding window
+    ],
+)
+def test_paged_decode_attention_matches_ref(dtype, B, KV, G, D, page, P, N, T, window):
+    """The batched serving entry point (block-table prefix + in-flight tail)
+    against the dense-gather oracle."""
+    rng = np.random.default_rng(5)
+    q = _rand(rng, (B, KV, G, D), dtype)
+    k_pages = _rand(rng, (KV, N, page, D), dtype)
+    v_pages = _rand(rng, (KV, N, page, D), dtype)
+    k_tail = _rand(rng, (B, KV, T, D), dtype)
+    v_tail = _rand(rng, (B, KV, T, D), dtype)
+    block_tables = jnp.asarray(rng.integers(0, N, (B, P)), jnp.int32)
+    prefix_len = jnp.asarray(rng.integers(1, P * page + 1, (B,)), jnp.int32)
+    t_used = rng.integers(1, T + 1, (B,))
+    tail_pos = np.full((B, T), -1, np.int32)
+    for b in range(B):
+        tail_pos[b, : t_used[b]] = int(prefix_len[b]) + np.arange(t_used[b])
+    cur_pos = jnp.asarray(np.asarray(prefix_len) + t_used - 1, jnp.int32)
+    args = (q, k_pages, v_pages, block_tables, prefix_len, k_tail, v_tail,
+            jnp.asarray(tail_pos), cur_pos)
+    out = ops.paged_decode_attention(*args, window=window)
+    expect = ref.paged_decode_attention_ref(*args, window=window)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32), **TOLS[dtype]
+    )
+
+
+def test_paged_decode_attention_matches_model_helper():
+    """Kernel == the model layer's jnp paged-decode formulation (the CPU
+    lowering the engine actually runs)."""
+    from repro.models.layers import paged_attention_decode
+
+    rng = np.random.default_rng(6)
+    B, KV, G, D, page, P, N, T = 2, 2, 2, 16, 4, 3, 8, 8
+    H = KV * G
+    q = _rand(rng, (B, KV, G, D), jnp.float32)
+    k_pages = _rand(rng, (KV, N, page, D), jnp.float32)
+    v_pages = _rand(rng, (KV, N, page, D), jnp.float32)
+    k_tail = _rand(rng, (B, KV, T, D), jnp.float32)
+    v_tail = _rand(rng, (B, KV, T, D), jnp.float32)
+    block_tables = jnp.asarray(rng.integers(0, N, (B, P)), jnp.int32)
+    prefix_len = jnp.asarray([P * page, P * page - 2], jnp.int32)
+    tail_pos = np.full((B, T), -1, np.int32)
+    tail_pos[:, :3] = np.asarray(prefix_len)[:, None] + np.arange(3)
+    cur_pos = prefix_len + 2
+    out_kernel = ops.paged_decode_attention(
+        q, k_pages, v_pages, block_tables, prefix_len, k_tail, v_tail,
+        jnp.asarray(tail_pos), cur_pos,
+    )
+    out_model = paged_attention_decode(
+        q.reshape(B, 1, H, D),
+        k_pages, v_pages, block_tables, prefix_len,
+        jnp.transpose(k_tail, (0, 2, 1, 3)),
+        jnp.transpose(v_tail, (0, 2, 1, 3)),
+        jnp.asarray(tail_pos), cur_pos,
+    )
+    np.testing.assert_allclose(
+        np.asarray(out_kernel).reshape(B, H, D),
+        np.asarray(out_model).reshape(B, H, D),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
 # ---------------------------------------------------------------- kv block copy
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
 def test_kv_block_copy_matches_ref(dtype):

@@ -1,0 +1,295 @@
+"""Paged zero-copy decode: parity with the dense-assembly path, zero-copy
+block residency, batched prefill sharing, context beyond the dense cache
+ceiling, and fail-closed ordering under paged restore failure.
+
+The tentpole property: decode attends over pool pages through per-request
+block tables — no dense per-request cache assembly — and a restored or
+promoted block is consumable at its page slot.  The dense path is kept as
+``decode_mode="dense"`` and must agree with the paged path to numerical
+tolerance across tiers (bf16 KV, different association order => tolerance,
+not bitwise).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.analyzer import (
+    check_failure_outcome_path,
+    check_observation_path,
+    validate_event_sequence,
+)
+from repro.core.claims import ClaimMode, ClaimState
+from repro.models.registry import build_model
+from repro.serving.engine import ServingEngine
+from repro.serving.snapshot_engine import SnapshotEngine
+
+PREFIX = tuple(range(10, 26))  # 16 tokens = 4 blocks of 4
+
+
+@pytest.fixture(scope="module")
+def bp():
+    cfg = reduced(get_config("qwen3-1.7b"))
+    bundle = build_model(cfg)
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    return bundle, params
+
+
+def make_engine(bp, mode="paged", **kw):
+    bundle, params = bp
+    kw.setdefault("block_size", 4)
+    kw.setdefault("device_blocks", 64)
+    kw.setdefault("cache_len", 64)
+    return ServingEngine(bundle, params, decode_mode=mode, **kw)
+
+
+def _first_logits(eng, tokens, max_new_tokens=2):
+    """Run admission+restore+prefill and return the pre-decode logits."""
+    return eng.prefill_logits(tokens, max_new_tokens=max_new_tokens)
+
+
+# ---------------------------------------------------------------- parity
+
+
+@pytest.mark.parametrize("tier", ["host", "disk"])
+def test_paged_matches_dense_after_restore(bp, tier):
+    """Same logits (within bf16 tolerance) paged vs dense when the claimed
+    prefix is offloaded to {tier} and restored — restored pages are consumed
+    in place, never assembled into a dense cache."""
+    prompt = PREFIX + (40, 41)
+    logits = {}
+    for mode in ("dense", "paged"):
+        eng = make_engine(bp, mode)
+        claim = eng.accept_claim(PREFIX, ClaimMode.OFFLOADABLE)
+        r1 = eng.submit(PREFIX + (30, 31), max_new_tokens=1)
+        eng.run(r1)
+        assert eng.offload_claim(claim.claim_id, tier=tier)
+        logits[mode] = _first_logits(eng, prompt)
+        assert claim.state == ClaimState.RESTORED
+    np.testing.assert_allclose(logits["paged"], logits["dense"], atol=3e-2, rtol=3e-2)
+    assert logits["paged"].argmax() == logits["dense"].argmax()
+
+
+def test_paged_matches_dense_fresh_prefill(bp):
+    prompt = tuple(range(300, 314))
+    lg_d = _first_logits(make_engine(bp, "dense"), prompt)
+    lg_p = _first_logits(make_engine(bp, "paged"), prompt)
+    np.testing.assert_allclose(lg_p, lg_d, atol=3e-2, rtol=3e-2)
+
+
+# ------------------------------------------------------------- zero-copy
+
+
+def test_blocks_are_page_views_not_copies(bp):
+    """Device-resident block payloads ARE views of the pool page store, and
+    a restore lands the block back into a page slot (no dense slab)."""
+    eng = make_engine(bp)
+    claim = eng.accept_claim(PREFIX, ClaimMode.OFFLOADABLE)
+    r = eng.submit(PREFIX + (30, 31), max_new_tokens=1)
+    eng.run(r)
+    blocks = eng.pool.lookup_prefix(PREFIX, eng.block_size)
+    assert len(blocks) == 4
+    for b in blocks:
+        assert b.page_index is not None
+        assert np.shares_memory(b.k, eng.pool.k_pages), "payload must live IN the page store"
+    # offload: the block leaves the device and owns its bytes
+    assert eng.offload_claim(claim.claim_id, tier="disk")
+    # restore: payload lands in a page slot again, attendable in place
+    r2 = eng.submit(PREFIX + (40, 41), max_new_tokens=1)
+    eng.run(r2)
+    assert r2.restored_tokens == len(PREFIX)
+    blocks = eng.pool.lookup_prefix(PREFIX, eng.block_size)
+    for b in blocks:
+        assert b.page_index is not None
+        assert np.shares_memory(b.k, eng.pool.k_pages)
+
+
+def test_shared_prefix_occupies_pages_once(bp):
+    """N batch-mates over one prefix share its pages (the batch×context
+    lever): pool usage grows by the suffix blocks only."""
+    eng = make_engine(bp, device_blocks=64)
+    shared = tuple(range(500, 516))  # 4 blocks
+    reqs = [eng.submit(shared + (600 + i,) * 4, max_new_tokens=2) for i in range(6)]
+    eng.run_batch(reqs)
+    assert all(r.status == "finished" for r in reqs)
+    # 4 shared blocks + 6 distinct suffix blocks — NOT 6 x 5
+    assert eng.pool.used == 4 + 6
+
+
+# ----------------------------------------------------- beyond-dense context
+
+
+def test_context_beyond_dense_cache_len(bp):
+    """Paged decode serves context longer than the dense cache shape: the
+    ceiling moves from cache_len to pool pages."""
+    bundle, params = bp
+    long_prompt = tuple(range(700, 748))  # 48 tokens > cache_len=32
+    ref = ServingEngine(bundle, params, block_size=4, device_blocks=64,
+                        cache_len=64, decode_mode="dense")
+    r_ref = ref.submit(long_prompt, max_new_tokens=3)
+    ref.run(r_ref)
+
+    eng = make_engine(bp, "paged", cache_len=32, device_blocks=64)
+    r = eng.submit(long_prompt, max_new_tokens=3)
+    eng.run(r)
+    assert r.status == "finished"
+    assert r.output_tokens == r_ref.output_tokens
+
+
+# -------------------------------------------------------- batched prefill
+
+
+def test_batched_prefill_shares_one_launch(bp):
+    """Same-bucket prompts run ONE shared prefill launch (padded+masked)."""
+    eng = make_engine(bp, device_blocks=256)
+    calls = []
+    orig = eng._jit_prefill_collect
+
+    def spy(params, batch):
+        calls.append(batch["tokens"].shape)
+        return orig(params, batch)
+
+    eng._jit_prefill_collect = spy
+    # lengths 12, 11, 12 -> one bucket of 12 (padded), lengths 18 -> its own
+    reqs = [
+        eng.submit(tuple(range(100, 112)), max_new_tokens=2),
+        eng.submit(tuple(range(200, 211)), max_new_tokens=2),
+        eng.submit(tuple(range(300, 312)), max_new_tokens=2),
+        eng.submit(tuple(range(400, 418)), max_new_tokens=2),
+    ]
+    eng.run_batch(reqs)
+    assert all(r.status == "finished" for r in reqs)
+    assert len(calls) == 2, calls  # one per bucket, not one per request
+    assert validate_event_sequence(eng.events).passed
+
+
+def test_padded_prefill_matches_unpadded(bp):
+    """A right-padded, masked row reproduces the unpadded prefill logits."""
+    eng1 = make_engine(bp, device_blocks=256)
+    eng2 = make_engine(bp, device_blocks=256)
+    short, long_ = tuple(range(100, 111)), tuple(range(200, 212))
+    lg_solo = _first_logits(eng1, short)
+    # same prompt prefilled inside a padded bucket with a longer prompt
+    r_s = eng2.submit(short, max_new_tokens=2)
+    r_l = eng2.submit(long_, max_new_tokens=2)
+    eng2._admit_and_restore(r_s)
+    eng2._admit_and_restore(r_l)
+    entries = eng2._prefill_bucket([r_s, r_l])
+    for e in entries:
+        for b in e["blocks"]:
+            b.ref -= 1
+    lg_bucket = np.asarray(entries[0]["logits"], np.float32)  # row of the shared launch
+    np.testing.assert_allclose(lg_bucket, lg_solo, atol=3e-2, rtol=3e-2)
+
+
+def test_exact_prefix_hit_still_materializes(bp):
+    """Regression: a claim accepted AFTER its prefix became resident must
+    still materialize when an exact-prefix request replays through the
+    paged tail (the named observation point applies to replays too)."""
+    eng = make_engine(bp)
+    eng.run(eng.submit(PREFIX, max_new_tokens=1))  # prefix resident, no claim yet
+    claim = eng.accept_claim(PREFIX, ClaimMode.BEST_EFFORT)
+    eng.run(eng.submit(PREFIX, max_new_tokens=1))  # exact-prefix replay
+    assert claim.state == ClaimState.MATERIALIZED
+    mats = [e for e in eng.events.named("claim_materialized") if e.claim_id == claim.claim_id]
+    assert mats and mats[0].payload["observation_point"] == "prefill_complete"
+
+
+def test_tiny_pool_continuation_refuses_not_crashes(bp):
+    """Regression: with a pool too small to hold a request's prefix AND its
+    new blocks, the chain pin makes the allocation fail closed (refusal
+    with allocation attribution) instead of evicting pages the request's
+    own block table attends."""
+    bundle, params = bp
+    eng = ServingEngine(bundle, params, block_size=4, device_blocks=2,
+                        cache_len=64, decode_mode="paged")
+    r1 = eng.submit(tuple(range(100, 108)), max_new_tokens=1)  # fills the pool
+    eng.run(r1)
+    assert r1.status == "finished"
+    r2 = eng.submit(tuple(range(100, 112)), max_new_tokens=1)  # prefix + 1 block
+    eng.run(r2)  # must not crash the batch
+    assert r2.status == "refused"
+    fin = [e for e in eng.events.named("request_finished") if e.request_id == r2.request_id]
+    assert fin and fin[0].payload["status"] == "REFUSED_ADMISSION"
+    # the surviving resident prefix is intact and unpinned
+    blocks = eng.pool.lookup_prefix(tuple(range(100, 108)), 4)
+    assert len(blocks) == 2 and all(b.ref == 0 for b in blocks)
+
+
+# ------------------------------------------- fail-closed under paged decode
+
+
+@pytest.mark.parametrize("tier", ["host", "disk"])
+def test_paged_restore_failure_fail_closed(bp, tier):
+    """Same-claim restore failure at the {tier}->device boundary keeps the
+    full ordered fail-closed path with paged decode: E11 -> E12 ->
+    E13(blocking_claim_ids) -> E14 before terminal handling, no output."""
+    eng = make_engine(bp)
+    claim = eng.accept_claim(PREFIX, ClaimMode.OFFLOADABLE)
+    r1 = eng.submit(PREFIX + (30, 31), max_new_tokens=1)
+    eng.run(r1)
+    assert eng.offload_claim(claim.claim_id, tier=tier)
+    eng.connector.injection.resident_claim_load_failure = True
+    eng.connector.injection.fail_claim_id = claim.claim_id
+
+    r2 = eng.submit(PREFIX + (40, 41), max_new_tokens=2)
+    eng.run(r2)
+    assert r2.status == "refused"
+    assert r2.output_tokens == []  # fail closed: pages never reached decode
+    assert claim.state == ClaimState.RESTORATION_FAILED
+    assert validate_event_sequence(eng.events).passed
+    v = check_failure_outcome_path(eng.events, claim.claim_id, r2.request_id, source_tier=tier)
+    assert v.passed, v.reasons
+
+
+def test_paged_batch_failure_isolation(bp):
+    """Within one paged batch, a same-claim restore failure refuses only the
+    affected request; batch-mates decode over their pages untouched."""
+    eng = make_engine(bp, device_blocks=256)
+    tp, op = tuple(range(800, 816)), tuple(range(900, 916))
+    target = eng.accept_claim(tp, ClaimMode.OFFLOADABLE)
+    other = eng.accept_claim(op, ClaimMode.OFFLOADABLE)
+    for pfx in (tp, op):
+        eng.run(eng.submit(pfx + (5, 6), max_new_tokens=1))
+    eng.offload_claim(target.claim_id)
+    eng.offload_claim(other.claim_id, tier="disk")
+    eng.connector.injection.resident_claim_load_failure = True
+    eng.connector.injection.fail_claim_id = target.claim_id
+
+    r_t = eng.submit(tp + (7, 8), max_new_tokens=2)
+    r_o = eng.submit(op + (7, 8), max_new_tokens=2)
+    eng.run_batch([r_t, r_o])
+    assert r_t.status == "refused" and r_t.output_tokens == []
+    assert r_o.status == "finished" and r_o.restored_tokens == len(op)
+    assert target.state == ClaimState.RESTORATION_FAILED
+    assert other.state == ClaimState.RESTORED
+    v = check_observation_path(eng.events, other.claim_id, r_o.request_id)
+    assert v.passed, v.reasons
+
+
+# ----------------------------------------------- snapshot batched decode
+
+
+def test_snapshot_serve_batch(bp):
+    """Recurrent-state snapshot serving decodes a whole batch with states
+    stacked on the batch axis through the shared greedy loop."""
+    cfg = reduced(get_config("xlstm-350m"))
+    bundle = build_model(cfg)
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    prefix = tuple(range(10, 22))
+
+    eng = SnapshotEngine(bundle, params)
+    claim = eng.accept_claim(prefix, ClaimMode.OFFLOADABLE)
+    eng.materialize_claim(claim.claim_id)
+    eng.offload_claim(claim.claim_id)
+
+    prompts = [prefix + (30 + i, 31 + i) for i in range(3)]
+    reqs = eng.serve_batch(prompts, max_new_tokens=3)
+    assert [r.status for r in reqs] == ["finished"] * 3
+    # the claim restored once, then every batch-mate reused it device-side
+    assert reqs[0].restored_tokens == len(prefix)
+    assert all(r.cached_tokens == len(prefix) for r in reqs)
+    assert all(len(r.output_tokens) == 3 for r in reqs)
+    assert eng.events.named("batch_scheduled")
+    assert validate_event_sequence(eng.events).passed
