@@ -1,6 +1,6 @@
 """Multi-claim attribution control (paper §7 path C, §8.3) + serving
 throughput (continuous batching vs sequential decode) + the paged-decode
-batch×context ceiling.
+batch×context ceiling + the chunked-prefill prompt ceiling.
 
 Attribution gate: 3/3 repetitions must attribute failure/refusal ONLY to the
 target claim while the non-target claim restores successfully.
@@ -19,6 +19,11 @@ only the in-flight tail per request, so the same budget serves both more
 requests AND longer contexts.  The paged cell is RUN, not modeled — every
 request must finish, and at a common feasible point both modes must agree
 on logits.
+
+Prefill ceiling gate: under the same device-KV budget, chunked prefill
+(``prefill_chunk=``, O(chunk) peak prefill KV) must admit a prompt >= 2x
+the dense prefill ceiling (the fixed cache shape), at logits parity with
+the monolithic prefill on that prompt.
 
 Results land in ``results/BENCH_serving.json`` so successive PRs have a
 throughput/latency/ceiling trajectory.
@@ -234,6 +239,121 @@ def run_ceiling(out_path: Path = Path("results/BENCH_serving.json")):
     return result
 
 
+def run_prefill_ceiling(out_path: Path = Path("results/BENCH_serving.json")):
+    """Max admissible prompt under one device-KV budget: chunked vs dense.
+
+    Same budget convention as ``run_ceiling`` (bs=4, N=64 pool pages,
+    cache_len=32 -> budget = 256 KV token slots):
+
+    - **dense prefill** writes into a fixed [cache_len] cache, so the
+      admissible prompt is ``cache_len - new_tokens`` REGARDLESS of pool
+      capacity — prompts beyond the shape are refused (fail closed,
+      ``dense_cache_overflow``), which this cell demonstrates by running
+      both sides of the boundary.
+    - **monolithic paged prefill** (pre-chunking) escapes the cache shape
+      but materializes the full [L, B, S, KV, Dh] collect buffer, so on
+      the device the prompt costs S buffer + S page slots: reported as
+      ``o_s_buffer_ceiling`` = budget // 2 (structural, like the dense
+      cell of ``run_ceiling``).
+    - **chunked prefill** (prefill_chunk=C) peaks at S page slots + C
+      chunk buffer: the admissible prompt is budget - C.  The cell is
+      RUN end to end — the request must finish, peak accounting must fit
+      the budget, and the chunked logits must match the monolithic
+      prefill's logits on the same prompt (greedy argmax equal + allclose
+      at bf16 tolerance).
+
+    Gate: chunked admissible prompt >= 2x the dense prefill ceiling at
+    logits parity.
+    """
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config, reduced
+    from repro.models.registry import build_model
+    from repro.serving.engine import ServingEngine
+
+    cfg = reduced(get_config("qwen3-1.7b"))
+    bundle = build_model(cfg)
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    bs, N, cache_len, new, chunk = 4, 64, 32, 4, 32
+    budget = N * bs  # device KV token slots
+
+    def mk(mode="paged", **kw):
+        return ServingEngine(
+            bundle, params, block_size=bs, device_blocks=N,
+            cache_len=cache_len, decode_mode=mode, **kw,
+        )
+
+    # --- dense ceiling: prompt + new must fit the cache shape -------------
+    ctx_dense = cache_len - new
+    eng_d = mk("dense")
+    r_ok = eng_d.submit(tuple(range(10, 10 + ctx_dense)), max_new_tokens=new)
+    eng_d.run(r_ok)
+    r_over = eng_d.submit(tuple(range(10, 10 + ctx_dense + bs)), max_new_tokens=new)
+    eng_d.run(r_over)
+    dense_ok = r_ok.status == "finished" and r_over.status == "refused"
+
+    # --- chunked cell: prompt bounded by pool pages, peak KV one chunk ----
+    ctx_chunked = budget - chunk  # page slots + chunk buffer == budget
+    prompt = tuple(range(0, ctx_chunked))
+    eng_c = mk(prefill_chunk=chunk)
+    # MEASURED peak, not a post-run formula: sample pool occupancy at every
+    # block insertion so a future transient allocation mid-prefill would
+    # genuinely fail this gate
+    peak_pages = {"n": 0}
+    orig_add = eng_c.pool.add_block
+
+    def tracking_add_block(*a, **kw):
+        blk = orig_add(*a, **kw)
+        peak_pages["n"] = max(peak_pages["n"], eng_c.pool.used)
+        return blk
+
+    eng_c.pool.add_block = tracking_add_block
+    r_c = eng_c.submit(prompt, max_new_tokens=new)
+    eng_c.run(r_c)
+    peak_tokens = max(peak_pages["n"], eng_c.pool.used) * bs + chunk
+    chunked_ok = r_c.status == "finished" and peak_tokens <= budget
+
+    # --- logits parity vs the monolithic prefill on the same prompt -------
+    lg_full = mk().prefill_logits(prompt)
+    lg_chunk = mk(prefill_chunk=chunk).prefill_logits(prompt)
+    parity = bool(
+        np.allclose(lg_chunk, lg_full, atol=3e-2, rtol=3e-2)
+        and lg_chunk.argmax() == lg_full.argmax()
+    )
+
+    result = {
+        "budget_kv_token_slots": budget,
+        "dense": {
+            "max_prompt": ctx_dense,
+            "at_ceiling_finished": r_ok.status == "finished",
+            "beyond_ceiling_refused": r_over.status == "refused",
+            "limit": "prompt + new_tokens <= cache_len (fixed cache shape; fail-closed refusal beyond)",
+        },
+        "o_s_buffer_ceiling": {
+            "max_prompt": budget // 2,
+            "limit": "monolithic paged prefill: S collect buffer + S page slots <= budget (structural)",
+        },
+        "chunked": {
+            "max_prompt": ctx_chunked,
+            "chunk": chunk,
+            "peak_kv_tokens": peak_tokens,
+            "all_finished": chunked_ok,
+            "limit": "page slots + one chunk buffer <= budget; prompt bounded by pool pages",
+        },
+        "ceiling_ratio": round(ctx_chunked / ctx_dense, 2),
+        "logits_parity": parity,
+        "meets_2x_criterion": bool(
+            dense_ok and chunked_ok and parity and ctx_chunked >= 2 * ctx_dense
+        ),
+    }
+    out_path = Path(out_path)
+    merged = json.loads(out_path.read_text()) if out_path.exists() else {}
+    merged["prefill_ceiling"] = result
+    out_path.write_text(json.dumps(merged, indent=1))
+    return result
+
+
 if __name__ == "__main__":
     fast = "--fast" in sys.argv
     make_engine = default_engine_factory()
@@ -247,5 +367,11 @@ if __name__ == "__main__":
     print(json.dumps(serving, indent=1))
     ceiling = run_ceiling()
     print(json.dumps(ceiling, indent=1))
-    if not serving["meets_2x_criterion"] or not ceiling["meets_2x_criterion"]:
+    prefill_ceiling = run_prefill_ceiling()
+    print(json.dumps(prefill_ceiling, indent=1))
+    if not (
+        serving["meets_2x_criterion"]
+        and ceiling["meets_2x_criterion"]
+        and prefill_ceiling["meets_2x_criterion"]
+    ):
         sys.exit(1)

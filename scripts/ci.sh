@@ -9,10 +9,13 @@
 #    pytest -x fails the gate on the first regression.
 # 2. Runs the fast subset of benchmarks/bench_multi_claim.py: the 3/3
 #    multi-claim attribution control, the batched-vs-sequential decode
-#    throughput gate (>= 2x), and the paged-decode batch×context ceiling
-#    gate (>= 2x the dense-assembly ceiling under one device-KV budget, at
-#    equal logits parity), emitting results/BENCH_serving.json.  The bench
-#    exits non-zero if either gate fails.
+#    throughput gate (>= 2x), the paged-decode batch×context ceiling gate
+#    (>= 2x the dense-assembly ceiling under one device-KV budget, at
+#    equal logits parity), and the chunked-prefill prompt ceiling gate
+#    (>= 2x the dense prefill ceiling under the same budget, at logits
+#    parity with the monolithic prefill), emitting
+#    results/BENCH_serving.json.  The bench exits non-zero if any gate
+#    fails.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -21,7 +24,7 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1: pytest (full suite, checker included) =="
 python -m pytest -x -q
 
-echo "== serving gates: attribution + batched decode + paged ceiling (fast) =="
+echo "== serving gates: attribution + batched decode + paged & prefill ceilings (fast) =="
 python benchmarks/bench_multi_claim.py --fast
 
 echo "== BENCH_serving.json =="

@@ -15,6 +15,7 @@ from repro.kernels.kv_block_copy import kv_block_copy_pallas
 from repro.kernels.paged_attention import (
     paged_attention_pallas,
     paged_decode_attention_pallas,
+    paged_prefill_attention_pallas,
 )
 
 
@@ -49,6 +50,20 @@ def paged_decode_attention(
     return paged_decode_attention_pallas(
         q, k_pages, v_pages, block_tables, prefix_len, k_tail, v_tail,
         tail_pos, cur_pos, softcap=softcap, window=window, interpret=interpret,
+    )
+
+
+@partial(jax.jit, static_argnames=("softcap", "window", "interpret"))
+def paged_prefill_attention(
+    q, k_pages, v_pages, block_tables, prefix_len, k_chunk, v_chunk,
+    *, softcap=0.0, window=0, interpret=None,
+):
+    """Chunked prefill: one chunk of queries over block-table prefix pages
+    plus the chunk's own keys (causal within chunk) — O(chunk) prefill KV."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return paged_prefill_attention_pallas(
+        q, k_pages, v_pages, block_tables, prefix_len, k_chunk, v_chunk,
+        softcap=softcap, window=window, interpret=interpret,
     )
 
 

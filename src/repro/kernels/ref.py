@@ -87,5 +87,44 @@ def paged_decode_attention_ref(
     return jnp.einsum("bkgs,bksd->bkgd", p, v_all).astype(q.dtype)
 
 
+def paged_prefill_attention_ref(
+    q, k_pages, v_pages, block_tables, prefix_len, k_chunk, v_chunk,
+    *, softcap=0.0, window=0,
+):
+    """Dense-gather oracle for the chunked-prefill entry point.
+
+    One prefill CHUNK attends the already-written prefix pages (full
+    attention — every prefix position precedes every chunk query) plus the
+    chunk's own keys (causal within the chunk).  Queries sit at absolute
+    positions ``prefix_len[b] + c`` for ``c in [0, C)`` — the contract the
+    Pallas kernel assumes (the engine feeds block-aligned chunks, so the
+    chunk always starts exactly at the end of the paged prefix).
+
+    q: [B, KV, G, C, D]; k/v_pages: [KV, N, page, D]; block_tables: [B, P];
+    prefix_len: [B]; k/v_chunk: [B, KV, C, D] -> [B, KV, G, C, D].
+    """
+    B, KV, G, C, D = q.shape
+    page = k_pages.shape[2]
+    P = block_tables.shape[1]
+    kd = k_pages[:, block_tables].transpose(1, 0, 2, 3, 4).reshape(B, KV, P * page, D)
+    vd = v_pages[:, block_tables].transpose(1, 0, 2, 3, 4).reshape(B, KV, P * page, D)
+    k_all = jnp.concatenate([kd, k_chunk], axis=2).astype(jnp.float32)
+    v_all = jnp.concatenate([vd, v_chunk], axis=2).astype(jnp.float32)
+    ppos = jnp.broadcast_to(jnp.arange(P * page)[None], (B, P * page))
+    ppos = jnp.where(ppos < prefix_len[:, None], ppos, -1)
+    cpos = prefix_len[:, None] + jnp.arange(C)[None, :]
+    pos = jnp.concatenate([ppos, cpos], axis=1)  # [B, S]
+    qpos = cpos  # [B, C]
+    s = jnp.einsum("bkgcd,bksd->bkgcs", q.astype(jnp.float32), k_all) / math.sqrt(D)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    valid = (pos[:, None, :] >= 0) & (pos[:, None, :] <= qpos[:, :, None])  # [B, C, S]
+    if window:
+        valid &= qpos[:, :, None] - pos[:, None, :] < window
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgcs,bksd->bkgcd", p, v_all).astype(q.dtype)
+
+
 def kv_block_copy_ref(src_pages, indices):
     return src_pages[indices]

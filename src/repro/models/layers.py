@@ -410,6 +410,116 @@ def paged_attention_decode(
     )
 
 
+def paged_attention_prefill(
+    q,
+    k_pages,
+    v_pages,
+    block_tables,
+    prefix_len,
+    k_chunk,
+    v_chunk,
+    q_positions,
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+):
+    """Chunk-of-queries prefill attention over PAGED prefix KV plus the
+    chunk itself — the O(chunk) prefill counterpart of
+    ``paged_attention_decode``.
+
+    The already-prefilled prefix lives in the device page pool and is
+    addressed through per-request block tables (full attention — every
+    prefix position precedes every chunk query); the chunk's own keys are
+    attended causally.  Chunk queries sit at absolute positions
+    ``prefix_len[b] + c`` (the engine feeds block-aligned chunks), which is
+    what ``q_positions`` must carry — the Pallas kernel derives positions
+    from ``prefix_len`` directly.
+
+    q:            [B, C, H, D]       chunk queries
+    k/v_pages:    [KV, N, page, D]   (this layer's slice of the pool)
+    block_tables: [B, P] int32       page ids per request
+    prefix_len:   [B] int32          tokens addressed via the block table
+    k/v_chunk:    [B, C, KV, D]      the chunk's own keys/values
+    q_positions:  [B, C] int32       absolute chunk positions
+    Returns [B, C, H, D].
+
+    On the TPU target this lowers to the Pallas chunked-prefill kernel
+    (kernels/paged_attention.paged_prefill_attention_pallas), which streams
+    prefix pages HBM->VMEM via the scalar-prefetched block table; this jnp
+    formulation is the same math with an explicit page gather (the gather
+    is transient — the full-length KV of a monolithic prefill is never
+    collected).
+    """
+    B, C, H, D = q.shape
+    KV = k_pages.shape[0]
+    G = H // KV
+    page = k_pages.shape[2]
+    P = block_tables.shape[1]
+    if jax.default_backend() == "tpu":
+        from repro.kernels.ops import paged_prefill_attention
+
+        qg = q.reshape(B, C, KV, G, D).transpose(0, 2, 3, 1, 4)  # [B, KV, G, C, D]
+        out = paged_prefill_attention(
+            qg,
+            k_pages,
+            v_pages,
+            block_tables,
+            prefix_len,
+            jnp.transpose(k_chunk, (0, 2, 1, 3)),
+            jnp.transpose(v_chunk, (0, 2, 1, 3)),
+            softcap=softcap,
+            window=window,
+        )
+        return out.transpose(0, 3, 1, 2, 4).reshape(B, C, H, D)
+    # gather the referenced pages: [KV, B, P, page, D] -> [B, P*page, KV, D]
+    kd = jnp.transpose(k_pages[:, block_tables], (1, 2, 3, 0, 4)).reshape(
+        B, P * page, KV, k_pages.shape[3]
+    )
+    vd = jnp.transpose(v_pages[:, block_tables], (1, 2, 3, 0, 4)).reshape(
+        B, P * page, KV, v_pages.shape[3]
+    )
+    ppos = jnp.broadcast_to(jnp.arange(P * page, dtype=jnp.int32)[None], (B, P * page))
+    ppos = jnp.where(ppos < prefix_len[:, None], ppos, -1)
+    k_all = jnp.concatenate([kd, k_chunk], axis=1)  # [B, S, KV, D]
+    v_all = jnp.concatenate([vd, v_chunk], axis=1)
+    pos_all = jnp.concatenate([ppos, q_positions.astype(jnp.int32)], axis=1)
+    scale = 1.0 / math.sqrt(D)
+    qg = q.reshape(B, C, KV, G, D).transpose(0, 2, 3, 1, 4)  # [B, KV, G, C, D]
+    kb = k_all.transpose(0, 2, 1, 3)  # [B, KV, S, D]
+    vb = v_all.transpose(0, 2, 1, 3)
+    s = _scores(qg, kb, scale, softcap)  # [B, KV, G, C, S]
+    valid = (pos_all[:, None, :] >= 0) & (
+        pos_all[:, None, :] <= q_positions[:, :, None]
+    )  # [B, C, S]
+    if window:
+        valid &= q_positions[:, :, None] - pos_all[:, None, :] < window
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("...cs,...sd->...cd", p.astype(vb.dtype), vb[:, :, None])
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, C, H, D).astype(q.dtype)
+
+
+def attn_paged_prefill_layer(
+    p, cfg, x, k_pages, v_pages, block_tables, prefix_len, positions, *, use_rope=True
+):
+    """One chunk of paged prefill: computes the chunk's (k, v) and attends
+    prefix pages (in place, via the block table) plus the chunk causally.
+
+    x: [B, C, d]; k/v_pages: [KV, N, page, Dh]; positions: [B, C] absolute
+    chunk positions (= prefix_len + arange(C)).
+    Returns (out [B, C, d], (k, v) [B, C, KV, Dh]) for the engine to land
+    in pool pages — the only KV this chunk ever materializes.
+    """
+    B, C, _ = x.shape
+    q, k, v = attn_qkv(p, cfg, x, positions, use_rope=use_rope)
+    out = paged_attention_prefill(
+        q, k_pages, v_pages, block_tables, prefix_len, k, v, positions,
+        window=cfg.sliding_window, softcap=cfg.attn_logit_softcap,
+    )
+    out = out.reshape(B, C, -1) @ p["wo"]
+    return out, (k, v)
+
+
 def attn_paged_decode_layer(
     p, cfg, x, k_pages, v_pages, block_tables, prefix_len,
     tail_k, tail_v, tail_pos, cur_pos, tail_slot, *, use_rope=True

@@ -86,8 +86,10 @@ class ModelBundle:
     # paged serving entry points (transformer families only; None elsewhere):
     # prefill_collect_fn(params, batch) -> (last-valid logits, k [L,B,S,KV,Dh], v)
     # paged_decode_fn(params, state, tokens, cur_pos) -> (logits, state)
+    # prefill_chunk_fn(params, state, tokens, positions) -> (ck, cv) [L,B,C,KV,Dh]
     prefill_collect_fn: Optional[Callable[..., Any]] = None
     paged_decode_fn: Optional[Callable[..., Any]] = None
+    prefill_chunk_fn: Optional[Callable[..., Any]] = None
 
 
 def _tokens_spec(b, s):
@@ -159,6 +161,7 @@ def build_model(cfg: ModelConfig, mesh=None, moe_strategy: str = "auto") -> Mode
         mk_cache = lambda b, cl: lib.make_cache(cfg, b, cl)
         prefill_collect = lambda p, b: lib.prefill_collect(p, cfg, b, mesh=mesh, moe_strategy=moe_strategy)
         paged_dec = lambda p, s, t, pos: lib.paged_decode_step(p, cfg, s, t, pos, mesh=mesh, moe_strategy=moe_strategy)
+        prefill_chk = lambda p, s, t, pos: lib.prefill_chunk(p, cfg, s, t, pos, mesh=mesh, moe_strategy=moe_strategy)
 
         def batch_spec(shape):
             b = shape.global_batch
@@ -180,7 +183,11 @@ def build_model(cfg: ModelConfig, mesh=None, moe_strategy: str = "auto") -> Mode
     if fam not in ("ssm", "hybrid", "audio") and cfg.kv_cache_dtype != "int8":
         # int8 blocks carry no scale sidecar yet; the paged path requires it,
         # so int8 engines stay on the dense decode path
-        paged_kw = {"prefill_collect_fn": prefill_collect, "paged_decode_fn": paged_dec}
+        paged_kw = {
+            "prefill_collect_fn": prefill_collect,
+            "paged_decode_fn": paged_dec,
+            "prefill_chunk_fn": prefill_chk,
+        }
     return ModelBundle(
         cfg=cfg,
         init_params=init_params,

@@ -273,6 +273,62 @@ def prefill_collect(params, cfg, batch, *, mesh=None, moe_strategy="auto"):
     return logits, ck, cv
 
 
+def prefill_chunk(params, cfg, state, tokens, positions, *, mesh=None, moe_strategy="auto"):
+    """One chunk of chunked paged prefill — the O(chunk) serving path.
+
+    ``state``:
+      k_pages/v_pages [L, KV, N, page, Dh]  the device page pool (read-only)
+      block_tables    [B, P] int32          pages of the ALREADY-PREFILLED
+                                            prefix (earlier chunks)
+      prefix_len      [B] int32             tokens addressed via the table
+    tokens: [B, C] the chunk's token ids; positions: [B, C] absolute
+    positions (= prefix_len + arange(C) — chunks are block-aligned, so a
+    chunk starts exactly where its paged prefix ends).
+
+    Returns the chunk's collected KV ``(ck, cv)`` stacked [L, B, C, KV, Dh]
+    — the ONLY KV this launch materializes.  The engine lands each
+    completed block directly in a pool page slot and carries the grown
+    block table into the next chunk, so peak prefill memory is O(chunk)
+    instead of the O(S) buffer ``prefill_collect`` returns.  Attention is
+    causal within the chunk and full over the prefix pages (every prefix
+    position precedes every chunk query), which composes to exact causal
+    attention over the whole prompt.
+
+    Entry state for decode (tail KV + pre-decode logits) intentionally
+    does NOT come from this launch: the engine replays the trailing tokens
+    through the same paged feed executable continuations use, keeping
+    cold-vs-restored parity structural (see serving/engine.py).
+    """
+    from repro.models.layers import attn_paged_prefill_layer
+
+    x = embed_tokens(params, cfg, tokens)  # [B, C, d]
+    bt = state["block_tables"]
+    plen = state["prefix_len"]
+
+    def body(carry, xs):
+        x, = carry
+        lp, kp, vp = xs
+        x = constrain_activations(x, mesh)
+        h = apply_norm(cfg.norm, lp["ln1"], x)
+        a, (k_, v_) = attn_paged_prefill_layer(
+            lp["attn"], cfg, h, kp, vp, bt, plen, positions
+        )
+        x = x + a
+        h = apply_norm(cfg.norm, lp["ln2"], x)
+        if cfg.moe.num_experts:
+            m, _ = _moe_block(lp, cfg, h, mesh, moe_strategy)
+        else:
+            m = mlp_apply(lp["mlp"], h, cfg.activation)
+        x = x + m
+        x = constrain_activations(x, mesh)
+        return (x,), (constrain_activations(k_, mesh), constrain_activations(v_, mesh))
+
+    (x,), (ck, cv) = jax.lax.scan(
+        body, (x,), (params["layers"], state["k_pages"], state["v_pages"])
+    )
+    return ck, cv
+
+
 def paged_decode_step(params, cfg, state, tokens, cur_pos, *, mesh=None, moe_strategy="auto"):
     """One decode step over paged prefix KV — the zero-copy serving path.
 

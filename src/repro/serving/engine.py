@@ -30,6 +30,18 @@ parity tests and the batch×context ceiling benchmark.
 launches (padded to the bucket length and masked by per-row valid lengths),
 so N same-bucket prompts cost ONE prefill compilation/launch instead of N.
 
+**Chunked prefill (``prefill_chunk=``).**  Buckets longer than the chunk
+run chunk-by-chunk: each launch attends already-written pool pages (via
+carried block tables) plus the in-flight chunk (causal), and completed
+blocks land in page slots before the next chunk
+(models/transformer.prefill_chunk; on TPU the Pallas kernel
+kernels/paged_attention.paged_prefill_attention_pallas).  Peak prefill KV
+is O(chunk_len) — the monolithic [L, B, S, KV, Dh] collect buffer never
+exists — so admissible prompt length is bounded by pool pages, not by the
+prefill launch.  Chains stay PINNED across chunks (mid-prefill allocations
+cannot evict a live chain) and a mid-prefill store failure fails closed
+with allocation attribution, exactly like the monolithic path.
+
 **Continuous batching.**  ``run_batch`` admits any number of requests under
 claim-scoped admission, runs restore/prefill through the shared fail-closed
 boundary, then decodes every in-flight request with ONE jitted step per
@@ -65,7 +77,9 @@ from repro.serving.kv_cache import (
     KVBlock,
     PoolExhausted,
     chain_hash,
+    pin_chain,
     prefix_object_id,
+    unpin_chain,
 )
 from repro.serving.offload import FailureInjectionConfig, OffloadingConnector
 
@@ -84,7 +98,11 @@ def _jitted_paged_steps(bundle):
     like core_engine._jitted_steps)."""
     if bundle.paged_decode_fn is None:
         return None
-    return (jax.jit(bundle.prefill_collect_fn), jax.jit(bundle.paged_decode_fn))
+    return (
+        jax.jit(bundle.prefill_collect_fn),
+        jax.jit(bundle.paged_decode_fn),
+        jax.jit(bundle.prefill_chunk_fn),
+    )
 
 
 def _round_up(n: int, m: int) -> int:
@@ -120,6 +138,7 @@ class ServingEngine(EngineCore):
         host_blocks: Optional[int] = None,
         disk_dir=None,
         decode_mode: str = "paged",
+        prefill_chunk: int = 0,
     ):
         super().__init__(
             bundle,
@@ -138,7 +157,18 @@ class ServingEngine(EngineCore):
             decode_mode = "dense"  # int8 / non-transformer bundles
         self.decode_mode = decode_mode
         if paged is not None:
-            self._jit_prefill_collect, self._jit_paged_decode = paged
+            (
+                self._jit_prefill_collect,
+                self._jit_paged_decode,
+                self._jit_prefill_chunk,
+            ) = paged
+        # prefill_chunk > 0 bounds peak prefill KV at O(chunk): prompts whose
+        # bucket exceeds the chunk run chunk-by-chunk, each completed chunk's
+        # blocks landing in pool pages before the next chunk launches.
+        # 0 keeps the single full-length collect launch.
+        self.prefill_chunk = (
+            _round_up(prefill_chunk, block_size) if prefill_chunk else 0
+        )
         self._pages_mirror: Optional[Tuple[int, Any, Any]] = None
 
     # ------------------------------------------------------------------ claims
@@ -215,13 +245,19 @@ class ServingEngine(EngineCore):
         before it are assumed resident and are skipped, their chain hashes
         still folded in).
 
-        With ``pin=True`` (requires start=0) returns the request's full
-        block chain covering ``upto``, every block PINNED (ref+1): a later
-        allocation in the same batch must not evict a page this request's
-        block table will attend.  The caller unpins after decode.  On
-        PoolExhausted the partial pins are unwound before re-raising.
+        With ``pin=True`` returns the stored/reused blocks from ``start``
+        onward, every block PINNED (ref+1): a later allocation in the same
+        batch must not evict a page this request's block table will attend.
+        The caller unpins after decode.  Chunked prefill calls this once
+        per chunk (``start`` = the chunk's first token) and accumulates the
+        returned segments into one pinned chain; claim metadata is bound
+        identically on every chunk — ``_claims_covering_block`` walks the
+        same chain hashes and the protected set whichever chunk stores the
+        block, so a claim accepted before prefill covers its blocks from
+        the FIRST chunk onward.  On PoolExhausted the partial pins of THIS
+        call are unwound before re-raising (a chunked caller unwinds its
+        accumulated chain).
         """
-        assert not (pin and start), "a pinned chain must start at block 0"
         chain: List[KVBlock] = []
         h = ""
         protected = self.scheduler.protected_claim_ids()
@@ -257,8 +293,7 @@ class ServingEngine(EngineCore):
                     blk.ref += 1
                     chain.append(blk)
         except PoolExhausted:
-            for b in chain:
-                b.ref -= 1
+            unpin_chain(chain)
             raise
         return chain
 
@@ -292,6 +327,35 @@ class ServingEngine(EngineCore):
         implementation.
         """
         req.status = "running"
+
+        # --- dense cache-shape ceiling (fail closed, not silent truncation) ---
+        # The dense path writes prefill KV into a fixed [cache_len] cache;
+        # a longer prompt would silently drop leading KV (make_cache keeps
+        # the trailing slice) and decode would overwrite the last slot.
+        # Refuse instead — the paged path has no such shape: context is
+        # bounded by pool pages (SWA rings are exempt: the window is the
+        # contract there).
+        if (
+            self.decode_mode != "paged"
+            and not self.cfg.sliding_window
+            and len(req.tokens) + req.max_new_tokens > self.cache_len
+        ):
+            req.status = "refused"
+            req.error = (
+                f"dense_cache_overflow: {len(req.tokens)} prompt + "
+                f"{req.max_new_tokens} new tokens > cache_len={self.cache_len}"
+            )
+            self.events.emit(
+                "scheduler_admission_refused",
+                request_id=req.request_id,
+                blocking_claim_ids=[],
+                conflict_action="refuse",
+                stage="cache_shape",
+            )
+            self.events.emit(
+                "request_finished", request_id=req.request_id, status="REFUSED_ADMISSION"
+            )
+            return None
 
         # --- device-resident prefix reuse (event-free index walk) ---
         dev_blocks = self.pool.lookup_prefix(req.tokens, self.block_size)
@@ -407,8 +471,7 @@ class ServingEngine(EngineCore):
         blocks = list(dev_blocks)
         # pin the chain BEFORE any allocation below: a same-batch store must
         # not evict a page this request's block table attends
-        for b in blocks:
-            b.ref += 1
+        pin_chain(blocks)
         try:
             if cached == n:
                 # exact-prefix hit: replay the last token through the tail
@@ -451,18 +514,23 @@ class ServingEngine(EngineCore):
             # materialize here (matching the dense path)
             self._materialize_claims(req, n - n % self.block_size)
         except BaseException:
-            for b in blocks:
-                b.ref -= 1
+            unpin_chain(blocks)
             raise
         return self._paged_entry(req, blocks, plen, tail_k, tail_v, tail_pos, logits)
 
     def _prefill_bucket(self, reqs: List[Request]) -> List[Dict[str, Any]]:
         """ONE shared prefill launch for a bucket of fresh prompts: padded to
-        the bucket length, masked by per-row valid lengths."""
+        the bucket length, masked by per-row valid lengths.
+
+        When ``prefill_chunk`` is set and the bucket is longer than one
+        chunk, the bucket runs through the chunked path instead — same
+        bucket sharing, O(chunk) peak prefill KV."""
         B = _round_up(len(reqs), BATCH_PAD)  # padding rows replicate row 0
         lens = [len(r.tokens) for r in reqs]
         lens += [lens[0]] * (B - len(reqs))
         S = _round_up(max(lens), self.block_size)
+        if self.prefill_chunk and S > self.prefill_chunk:
+            return self._prefill_bucket_chunked(reqs, lens, B)
         tokens = np.zeros((B, S), np.int32)
         for i in range(B):
             r = reqs[i] if i < len(reqs) else reqs[0]
@@ -498,8 +566,109 @@ class ServingEngine(EngineCore):
             try:
                 entries.append(self._continue_paged(req, blocks, pages))
             finally:
-                for b in blocks:
-                    b.ref -= 1  # release store-time pins; the entry holds its own
+                unpin_chain(blocks)  # release store-time pins; the entry holds its own
+        return entries
+
+    def _prefill_bucket_chunked(
+        self, reqs: List[Request], lens: List[int], B: int
+    ) -> List[Dict[str, Any]]:
+        """Chunked paged prefill for one bucket: the prompt runs CHUNK BY
+        CHUNK through ``prefill_chunk`` — each launch attends the pages
+        already written for its rows (carried block tables, full attention)
+        plus the in-flight chunk (causal), and each completed chunk's
+        blocks land in pool page slots before the next chunk launches.
+
+        Peak prefill KV is O(chunk_len): the monolithic [L, B, S, KV, Dh]
+        collect buffer never exists, so admissible prompt length is bounded
+        by pool pages (the claim substrate), not by what one launch can
+        hold — the last dense-shaped memory cliff in the serving stack.
+
+        Invariants:
+        - chunks are block-aligned and the bucket guarantees every row's
+          full blocks cover every chunk start, so ``prefix_len`` is uniform
+          per chunk and the chunk contract (queries at prefix_len + c)
+          holds for every row;
+        - each row's chain is PINNED as it grows (``pin_chain`` semantics
+          via ``_store_prefix_blocks``): a bucket-mate's store in a later
+          chunk can never evict a page a live block table attends;
+        - a mid-prefill store failure (PoolExhausted) unwinds THAT row's
+          pins and refuses it with allocation attribution
+          (``scheduler_admission_refused`` stage=allocation) — the same
+          ordered claim-scoped outcome the monolithic path yields; bucket
+          mates continue untouched;
+        - claims materialize at ``prefill_complete`` after the final
+          chunk, with metadata bound from the first chunk's stores, and
+          the decode entry (tail + logits) comes from the SAME paged feed
+          executable as continuations (parity stays structural).
+        """
+        bs = self.block_size
+        C = self.prefill_chunk
+        # chunk-align the bucket so every launch sees [B, C] tokens (bounds
+        # recompiles); right-padding stays causally masked and unstored
+        S = _round_up(_round_up(max(lens), bs), C)
+        tokens = np.zeros((B, S), np.int32)
+        for i in range(B):
+            r = reqs[i] if i < len(reqs) else reqs[0]
+            tokens[i, : len(r.tokens)] = r.tokens
+        chains: List[List[KVBlock]] = [[] for _ in reqs]
+        alive = list(range(len(reqs)))
+        # ONE block-table width for the whole bucket: columns beyond the
+        # current prefix are masked by prefix_len, so every chunk shares a
+        # single compiled executable instead of recompiling as P grows
+        P = _round_up(S // bs, 4)
+        for lo in range(0, S, C):
+            if not alive:
+                break
+            hi = lo + C
+            jk, jv = self._device_pages()
+            bt = np.zeros((B, P), np.int32)
+            for i in range(B):
+                # padding rows replicate row 0; refused rows keep their
+                # (empty) chain — their outputs are never stored anyway
+                pt = self.pool.page_table(chains[i] if i < len(reqs) else chains[0])
+                bt[i, : len(pt)] = pt
+            state = {
+                "k_pages": jk,
+                "v_pages": jv,
+                "block_tables": jnp.asarray(bt),
+                "prefix_len": jnp.full((B,), lo, jnp.int32),
+            }
+            pos = jnp.broadcast_to(
+                jnp.arange(lo, hi, dtype=jnp.int32)[None], (B, C)
+            )
+            ck, cv = self._jit_prefill_chunk(
+                self.params, state, jnp.asarray(tokens[:, lo:hi]), pos
+            )
+            ck = np.asarray(ck)  # [L, B, C, KV, Dh] — the chunk, not O(S)
+            cv = np.asarray(cv)
+            for i in list(alive):
+                req = reqs[i]
+                upto = min(hi, lens[i] - lens[i] % bs)
+                if upto <= lo:
+                    continue
+                try:
+                    chains[i].extend(
+                        self._store_prefix_blocks(
+                            req, ck[:, i], cv[:, i], upto, start=lo
+                        )
+                    )
+                except PoolExhausted as e:
+                    # fail closed mid-prefill: unwind THIS row's pinned
+                    # chain; its already-shared pages stay owned by the
+                    # bucket mates that also pinned them
+                    unpin_chain(chains[i])
+                    chains[i] = []
+                    self._refuse_allocation(req, e)
+                    alive.remove(i)
+        entries = []
+        pages = self._device_pages() if alive else None
+        for i in alive:
+            req = reqs[i]
+            self._materialize_claims(req, lens[i] - lens[i] % bs)
+            try:
+                entries.append(self._continue_paged(req, chains[i], pages))
+            finally:
+                unpin_chain(chains[i])  # the entry holds its own pins
         return entries
 
     def _decode_paged(self, entries: List[Dict[str, Any]]) -> None:
@@ -635,8 +804,7 @@ class ServingEngine(EngineCore):
             if not entries:  # refused at the allocation stage
                 raise RuntimeError(f"request terminated: {req.status} ({req.error})")
             entry = entries[0]
-        for b in entry["blocks"]:
-            b.ref -= 1
+        unpin_chain(entry["blocks"])
         return np.asarray(entry["logits"], np.float32)
 
     def run_batch(self, reqs: Sequence[Request]) -> List[Request]:
@@ -677,8 +845,7 @@ class ServingEngine(EngineCore):
                 else:
                     # pin immediately: an earlier batch-mate's store must not
                     # evict this request's prefix before its turn comes
-                    for b in dev_blocks:
-                        b.ref += 1
+                    pin_chain(dev_blocks)
                     pending_continue.append((req, dev_blocks))
             except PoolExhausted as e:
                 self._refuse_allocation(req, e)
@@ -688,8 +855,7 @@ class ServingEngine(EngineCore):
         if pending_continue:
             pages = self._device_pages()
             for req, dev_blocks in pending_continue:
-                for b in dev_blocks:
-                    b.ref -= 1  # hand the pin over to _continue_paged's own
+                unpin_chain(dev_blocks)  # hand the pin over to _continue_paged's own
                 try:
                     entries.append(self._continue_paged(req, dev_blocks, pages))
                 except PoolExhausted as e:
@@ -712,8 +878,7 @@ class ServingEngine(EngineCore):
         finally:
             if paged:
                 for e in entries:
-                    for b in e["blocks"]:
-                        b.ref -= 1
+                    unpin_chain(e["blocks"])
         for entry in entries:
             self._finish_ok(entry["req"])
         return reqs

@@ -86,6 +86,20 @@ class PoolExhausted(RuntimeError):
         self.blocking_claim_ids = blocking_claim_ids
 
 
+def pin_chain(blocks: Sequence[KVBlock]) -> None:
+    """Hold a reference on every block of a chain: a pinned block is never
+    a victim candidate, so an allocation elsewhere in the same batch (or a
+    later chunk of the same chunked prefill) cannot evict a page a live
+    block table attends.  Callers balance with ``unpin_chain``."""
+    for b in blocks:
+        b.ref += 1
+
+
+def unpin_chain(blocks: Sequence[KVBlock]) -> None:
+    for b in blocks:
+        b.ref -= 1
+
+
 class BlockPool:
     """Device-side block pool with claim-aware victim selection and a paged
     backing store.
@@ -105,6 +119,13 @@ class BlockPool:
     cache is ever assembled, and a restored/promoted block is usable the
     moment its payload lands in a slot.  Payloads with other shapes (state
     snapshots) bypass the page store and own their arrays.
+
+    Chunked prefill writes pages AS IT GOES: each completed chunk's blocks
+    land here before the next chunk runs (serving/engine.py,
+    ``_prefill_bucket_chunked``), pinned via ``pin_chain`` so a later
+    chunk's allocation can never evict a page the growing block table
+    attends — the pool is the only resident prefill KV, bounding peak
+    prefill memory at O(chunk).
     """
 
     def __init__(self, capacity_blocks: int, event_log, clock=time.monotonic):

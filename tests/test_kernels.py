@@ -198,6 +198,107 @@ def test_paged_decode_attention_matches_model_helper():
     )
 
 
+# ----------------------------------------------- chunked prefill (serving entry)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,KV,G,D,page,P,N,C,window,softcap",
+    [
+        (2, 2, 2, 16, 4, 4, 16, 8, 0, 0.0),
+        (1, 4, 1, 32, 8, 3, 8, 16, 0, 0.0),
+        (3, 1, 4, 16, 4, 5, 32, 8, 12, 0.0),  # sliding window
+        (1, 2, 2, 16, 4, 3, 8, 8, 0, 20.0),   # softcap
+    ],
+)
+def test_paged_prefill_attention_matches_ref(dtype, B, KV, G, D, page, P, N, C, window, softcap):
+    """The chunked-prefill entry point (chunk queries over block-table
+    prefix + causal within the chunk) against the dense-gather oracle."""
+    rng = np.random.default_rng(7)
+    q = _rand(rng, (B, KV, G, C, D), dtype)
+    k_pages = _rand(rng, (KV, N, page, D), dtype)
+    v_pages = _rand(rng, (KV, N, page, D), dtype)
+    k_chunk = _rand(rng, (B, KV, C, D), dtype)
+    v_chunk = _rand(rng, (B, KV, C, D), dtype)
+    block_tables = jnp.asarray(rng.integers(0, N, (B, P)), jnp.int32)
+    # block-aligned prefixes, including an empty one (first chunk of a prompt)
+    prefix_len = jnp.asarray(
+        rng.integers(0, P + 1, (B,)) * page, jnp.int32
+    )
+    args = (q, k_pages, v_pages, block_tables, prefix_len, k_chunk, v_chunk)
+    out = ops.paged_prefill_attention(*args, window=window, softcap=softcap)
+    expect = ref.paged_prefill_attention_ref(*args, window=window, softcap=softcap)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32), **TOLS[dtype]
+    )
+
+
+def test_paged_prefill_attention_matches_model_helper():
+    """Kernel == the model layer's jnp chunked-prefill formulation (the CPU
+    lowering the engine actually runs)."""
+    from repro.models.layers import paged_attention_prefill
+
+    rng = np.random.default_rng(8)
+    B, KV, G, D, page, P, N, C = 2, 2, 2, 16, 4, 3, 8, 8
+    H = KV * G
+    q = _rand(rng, (B, KV, G, C, D), jnp.float32)
+    k_pages = _rand(rng, (KV, N, page, D), jnp.float32)
+    v_pages = _rand(rng, (KV, N, page, D), jnp.float32)
+    k_chunk = _rand(rng, (B, KV, C, D), jnp.float32)
+    v_chunk = _rand(rng, (B, KV, C, D), jnp.float32)
+    block_tables = jnp.asarray(rng.integers(0, N, (B, P)), jnp.int32)
+    prefix_len = jnp.asarray([P * page, page], jnp.int32)
+    q_positions = prefix_len[:, None] + jnp.arange(C)[None, :]
+    out_kernel = ops.paged_prefill_attention(
+        q, k_pages, v_pages, block_tables, prefix_len, k_chunk, v_chunk
+    )
+    out_model = paged_attention_prefill(
+        q.transpose(0, 3, 1, 2, 4).reshape(B, C, H, D),
+        k_pages, v_pages, block_tables, prefix_len,
+        jnp.transpose(k_chunk, (0, 2, 1, 3)),
+        jnp.transpose(v_chunk, (0, 2, 1, 3)),
+        q_positions,
+    )
+    np.testing.assert_allclose(
+        np.asarray(out_kernel).transpose(0, 3, 1, 2, 4).reshape(B, C, H, D),
+        np.asarray(out_model),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_paged_prefill_composes_to_full_causal():
+    """Running a sequence chunk-by-chunk (prefix pages + causal chunk)
+    reproduces one full causal flash attention over the whole sequence —
+    the identity chunked prefill rests on."""
+    rng = np.random.default_rng(9)
+    B, KV, G, D, page, C = 1, 2, 2, 16, 4, 8
+    S = 4 * C  # 4 chunks
+    H = KV * G
+    q_all = _rand(rng, (B, H, S, D), jnp.float32)
+    k_all = _rand(rng, (B, KV, S, D), jnp.float32)
+    v_all = _rand(rng, (B, KV, S, D), jnp.float32)
+    full = ref.flash_attention_ref(q_all, k_all, v_all, causal=True)  # [B, H, S, D]
+
+    P = S // page
+    k_pages = np.zeros((KV, P, page, D), np.float32)
+    v_pages = np.zeros((KV, P, page, D), np.float32)
+    outs = []
+    for lo in range(0, S, C):
+        q = q_all[:, :, lo : lo + C].reshape(B, KV, G, C, D)
+        kc = k_all[:, :, lo : lo + C]
+        vc = v_all[:, :, lo : lo + C]
+        bt = jnp.asarray([[i for i in range(P)]], jnp.int32)
+        out = ops.paged_prefill_attention(
+            q, jnp.asarray(k_pages), jnp.asarray(v_pages), bt,
+            jnp.asarray([lo], jnp.int32), kc, vc,
+        )
+        outs.append(np.asarray(out))  # [B, KV, G, C, D]
+        # land the chunk's pages before the next chunk, like the engine
+        for b0 in range(lo // page, (lo + C) // page):
+            k_pages[:, b0] = np.asarray(k_all[0, :, b0 * page : (b0 + 1) * page])
+            v_pages[:, b0] = np.asarray(v_all[0, :, b0 * page : (b0 + 1) * page])
+    got = np.concatenate(outs, axis=3).reshape(B, KV, G, S, D).reshape(B, H, S, D)
+    np.testing.assert_allclose(got, np.asarray(full), rtol=1e-5, atol=1e-5)
+
+
 # ---------------------------------------------------------------- kv block copy
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
 def test_kv_block_copy_matches_ref(dtype):
