@@ -16,6 +16,13 @@
 #    parity with the monolithic prefill), emitting
 #    results/BENCH_serving.json.  The bench exits non-zero if any gate
 #    fails.
+# 3. Runs the seeded chaos campaign (benchmarks/bench_chaos.py): >= 200
+#    injected faults (transient/permanent/corruption/worker-death/
+#    capacity) plus the tier-quarantine phase, gating on zero crashes,
+#    zero analyzer order violations, zero cross-claim contamination, and
+#    fail_closed_total{trigger} matching the injected plan EXACTLY; the
+#    summary (counters, refusal rates, retry histogram) merges into
+#    results/BENCH_serving.json under "chaos_campaign".
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -26,6 +33,9 @@ python -m pytest -x -q
 
 echo "== serving gates: attribution + batched decode + paged & prefill ceilings (fast) =="
 python benchmarks/bench_multi_claim.py --fast
+
+echo "== chaos campaign: seeded fault plans, exact fail-closed attribution =="
+python benchmarks/bench_chaos.py
 
 echo "== BENCH_serving.json =="
 cat results/BENCH_serving.json

@@ -249,6 +249,124 @@ def check_multi_claim_attribution(
     return Verdict(True, ["target-only attribution; non-target restored cleanly"])
 
 
+# -- chaos-campaign conformance checks ----------------------------------------
+
+
+def check_fail_closed_attribution(log: EventLog) -> Verdict:
+    """Every fail-closed outcome in the trace is ordered and attributed.
+
+    Campaign-wide invariants (any number of claims/requests in one log):
+
+      * every E12 is preceded by a same-claim E11 (affected-block evidence
+        exists before the scheduler boundary fires);
+      * every E13 names a non-empty ``blocking_claim_ids`` and each named
+        claim has an earlier E12 for the SAME request (no unattributed or
+        cross-request refusals);
+      * after a request's E13 there is a terminal ``request_finished`` with
+        FINISHED_ERROR status, and the request never serves output (no E10)
+        after its E12;
+      * every E4 failure whose reason marks a quarantined tier is ordered
+        AFTER the ``tier_quarantined`` event for that tier.
+    """
+    ev = log.events
+    reasons: List[str] = []
+
+    e11_seqs: dict = {}  # claim_id -> list of E11 seqs
+    e12_by_req: dict = {}  # request_id -> {claim_id: seq}
+    quarantined_at: dict = {}  # tier -> seq of tier_quarantined
+    for e in ev:
+        if e.name == "offload_worker_load_failed":
+            e11_seqs.setdefault(e.claim_id, []).append(e.seq)
+        elif e.name == "tier_quarantined":
+            tier = e.payload.get("tier")
+            if tier not in quarantined_at:
+                quarantined_at[tier] = e.seq
+
+    n_e12 = n_e13 = 0
+    for e in ev:
+        if e.name == "scheduler_resident_claim_restoration_failed":
+            n_e12 += 1
+            if not any(s < e.seq for s in e11_seqs.get(e.claim_id, [])):
+                return Verdict.fail(
+                    f"E12 for claim {e.claim_id} without a prior same-claim E11"
+                )
+            e12_by_req.setdefault(e.request_id, {})[e.claim_id] = e.seq
+        elif e.name == "scheduler_active_request_refused":
+            n_e13 += 1
+            blocking = e.payload.get("blocking_claim_ids", [])
+            if not blocking:
+                return Verdict.fail(f"E13 for {e.request_id} with empty blocking_claim_ids")
+            for cid in blocking:
+                if e12_by_req.get(e.request_id, {}).get(cid) is None:
+                    return Verdict.fail(
+                        f"E13 blocking claim {cid} has no earlier E12 for request {e.request_id}"
+                    )
+            term = _first(
+                ev, "request_finished", after=e.seq, request_id=e.request_id
+            )
+            if term is None or term.payload.get("status") != "FINISHED_ERROR":
+                return Verdict.fail(
+                    f"refused request {e.request_id} did not terminate FINISHED_ERROR"
+                )
+        elif e.name == "offload_worker_transfer_finished" and not e.payload.get("ok", True):
+            reason = e.payload.get("reason", "")
+            if isinstance(reason, str) and reason.startswith("tier_quarantined:"):
+                tier = reason.split(":", 1)[1].split(":", 1)[0]
+                q = quarantined_at.get(tier)
+                if q is None or q > e.seq:
+                    return Verdict.fail(
+                        f"quarantine-attributed failure on {tier!r} precedes tier_quarantined"
+                    )
+    # fallback-recompute rejection, campaign-wide: no request serves output
+    # after its claim-scoped restoration failure
+    for rid, claims in e12_by_req.items():
+        first_e12 = min(claims.values())
+        ok_fin = _first(
+            ev, "offload_request_finished_no_pending_jobs", after=first_e12, request_id=rid
+        )
+        if ok_fin is not None:
+            return Verdict.fail(f"request {rid} served output after restoration failure")
+    reasons.append(f"{n_e12} E12 / {n_e13} E13 outcomes ordered and attributed")
+    return Verdict(True, reasons)
+
+
+def check_retry_bounded(log: EventLog, max_attempts: int) -> Verdict:
+    """Transient retries are bounded and terminate.
+
+    Every ``transfer_retry_scheduled`` must carry ``attempt < max_attempts``,
+    and each retried (block, direction) pair must reach a terminal E4 (ok or
+    not) ordered after its LAST retry — a retry loop that never concludes is
+    an order violation, not a liveness hope.
+    """
+    ev = log.events
+    last_retry: dict = {}  # (block_id, direction) -> seq
+    n_retries = 0
+    for e in ev:
+        if e.name != "transfer_retry_scheduled":
+            continue
+        n_retries += 1
+        att = e.payload.get("attempt", 0)
+        if not isinstance(att, int) or att >= max_attempts:
+            return Verdict.fail(
+                f"retry attempt {att} not below max_attempts={max_attempts}"
+            )
+        key = (e.payload.get("block_id"), e.payload.get("direction"))
+        last_retry[key] = e.seq
+    for (block_id, direction), seq in last_retry.items():
+        term = _first(
+            ev,
+            "offload_worker_transfer_finished",
+            after=seq,
+            block_id=block_id,
+            direction=direction,
+        )
+        if term is None:
+            return Verdict.fail(
+                f"retried block {block_id} ({direction}) has no terminal E4 after last retry"
+            )
+    return Verdict(True, [f"{n_retries} retries bounded below {max_attempts}, all terminal"])
+
+
 # -- false-positive control checks (the analyzer must REJECT these) -----------
 
 

@@ -75,6 +75,11 @@ NATIVE_EVENTS = (
     "offload_tier_promote",
     # continuous batching (serving/engine.py)
     "batch_scheduled",
+    # fault handling (serving/chaos.py, serving/offload.py): a bounded
+    # transient retry is visible in the trace, and tier quarantine is an
+    # explicit boundary event ordered before any quarantine-attributed refusal
+    "transfer_retry_scheduled",
+    "tier_quarantined",
 )
 
 ALL_EVENT_NAMES = frozenset(E.values()) | frozenset(NATIVE_EVENTS)

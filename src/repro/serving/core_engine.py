@@ -37,9 +37,15 @@ from repro.core.claims import (
     ResidentClaim,
 )
 from repro.core.events import EventLog
+from repro.serving.chaos import (
+    FailClosedCounters,
+    FaultPlan,
+    TRIGGER_INJECTED,
+)
 from repro.serving.kv_cache import BlockPool, KVBlock, PoolExhausted
 from repro.serving.offload import FailureInjectionConfig, OffloadingConnector
 from repro.serving.tiers import DiskTier, HostTier
+from repro.serving.transfer_queue import RetryPolicy
 
 
 @lru_cache(maxsize=16)
@@ -119,7 +125,11 @@ class Scheduler:
 
     # -- the invalid-KV-load boundary (witness path B, E12/E13) ----------------
     def on_invalid_kv_load(
-        self, request: Request, failed_claims: List[ResidentClaim], reason: str
+        self,
+        request: Request,
+        failed_claims: List[ResidentClaim],
+        reason: str,
+        trigger: Optional[str] = None,
     ) -> SchedulerOutcome:
         blocking = []
         for claim in failed_claims:
@@ -130,6 +140,7 @@ class Scheduler:
                 claim_id=claim.claim_id,
                 object_id=claim.object_id,
                 reason=reason,
+                trigger=trigger,
                 request_status="FINISHED_ERROR",
             )
             blocking.append(claim.claim_id)
@@ -138,6 +149,7 @@ class Scheduler:
             request_id=request.request_id,
             blocking_claim_ids=blocking,
             reason=reason,
+            trigger=trigger,
         )
         return SchedulerOutcome("active_request_refused", blocking, reason)
 
@@ -221,6 +233,9 @@ class EngineCore:
         namespace: str = "default",
         host_blocks: Optional[int] = None,
         disk_dir=None,
+        fault_plan: Optional[FaultPlan] = None,
+        retry_policy: Optional[RetryPolicy] = None,
+        quarantine_after: Optional[int] = 3,
     ):
         self.bundle = bundle
         self.cfg = bundle.cfg
@@ -238,14 +253,43 @@ class EngineCore:
         self.pool = BlockPool(device_blocks, self.events)
         self.host = HostTier(host_blocks)
         self.disk = DiskTier(disk_dir)
+        self.fault_plan = fault_plan
+        # fail_closed_total{trigger=...}: every fail-closed outcome of this
+        # engine increments exactly one trigger label (ROADMAP item 5)
+        self.fail_closed = FailClosedCounters()
         self.connector = OffloadingConnector(
-            self.pool, self.host, self.events, injection, disk_pool=self.disk
+            self.pool,
+            self.host,
+            self.events,
+            injection,
+            disk_pool=self.disk,
+            fault_plan=fault_plan,
+            retry_policy=retry_policy,
+            quarantine_after=quarantine_after,
         )
         self.scheduler = Scheduler(self.registry, self.pool, self.events)
         self._req_ids = itertools.count()
         self.requests: Dict[str, Request] = {}
         self._claim_prefixes: Dict[str, Tuple[int, ...]] = {}
         self._jit_prefill, self._jit_decode = _jitted_steps(bundle, cache_len)
+
+    # ---------------------------------------------------------------- teardown
+    def close(self) -> None:
+        """Explicit engine teardown: stop the transfer worker and remove the
+        disk tier's spill directory.  Idempotent; also usable as a context
+        manager (``with ServingEngine(...) as eng: ...``)."""
+        self.connector.queue.shutdown()
+        self.disk.close()
+
+    def __enter__(self) -> "EngineCore":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def fail_closed_total(self) -> Dict[str, int]:
+        """Exported counter registry: trigger label -> count."""
+        return self.fail_closed.as_dict()
 
     # ------------------------------------------------------------------ claims
     def accept_claim(
@@ -361,6 +405,12 @@ class EngineCore:
                 request_id=request_id,
                 tier=tier,
             )
+        else:
+            # fail-closed store: the claim is NOT marked offloaded (its
+            # device blocks that did move are simply absent down-tier) and
+            # the outcome is counted with trigger attribution — e.g. a
+            # quarantined target tier refuses new offload-dependent work
+            self.fail_closed.increment(job.failure_trigger or TRIGGER_INJECTED)
         self.connector.complete_job(job)
         return job.ok
 
@@ -401,21 +451,28 @@ class EngineCore:
             protected_claims=self.scheduler.protected_claim_ids(),
         )
         if not job.ok:
+            # per-job attribution: the first failing block's (reason,
+            # trigger) drives both the refusal reason and the counter label
+            reason = job.failure_reason or self.connector.injection.failure_reason
+            trigger = job.failure_trigger or TRIGGER_INJECTED
             if restore_claims:
                 # scheduler invalid-KV-load boundary: claim-scoped,
                 # fail-closed, ordered BEFORE terminal handling (path B)
                 outcome = self.scheduler.on_invalid_kv_load(
                     req,
                     [c for c in restore_claims if c.state == ClaimState.RESTORE_REQUIRED],
-                    reason=self.connector.injection.failure_reason,
+                    reason=reason,
+                    trigger=trigger,
                 )
                 req.status = "refused"
                 req.error = outcome.reason
+                self.fail_closed.increment(trigger)
             else:
                 # unclaimed generic failure: NOT a claim outcome (fail closed);
                 # the request errors without claim-scoped scheduler events.
                 req.status = "error"
                 req.error = "unclaimed_load_failure"
+                self.fail_closed.increment("unclaimed_load_failure")
             self.events.emit(
                 "offload_request_finished_pending_jobs",
                 request_id=req.request_id,

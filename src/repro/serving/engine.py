@@ -65,6 +65,7 @@ import numpy as np
 
 from repro.core.claims import ClaimState, ResidentClaim
 from repro.serving.cache_object import KVChainKind
+from repro.serving.chaos import TRIGGER_CAPACITY
 from repro.serving.core_engine import (
     EngineCore,
     Request,
@@ -139,6 +140,9 @@ class ServingEngine(EngineCore):
         disk_dir=None,
         decode_mode: str = "paged",
         prefill_chunk: int = 0,
+        fault_plan=None,
+        retry_policy=None,
+        quarantine_after: Optional[int] = 3,
     ):
         super().__init__(
             bundle,
@@ -151,6 +155,9 @@ class ServingEngine(EngineCore):
             namespace=namespace,
             host_blocks=host_blocks,
             disk_dir=disk_dir,
+            fault_plan=fault_plan,
+            retry_policy=retry_policy,
+            quarantine_after=quarantine_after,
         )
         paged = _jitted_paged_steps(bundle)
         if decode_mode == "paged" and paged is None:
@@ -328,6 +335,24 @@ class ServingEngine(EngineCore):
         """
         req.status = "running"
 
+        # --- injected pool/capacity pressure (chaos): refuse at admission,
+        # attributed, before any allocation touches the pool ---
+        if self.fault_plan is not None and self.fault_plan.draw_capacity(req.request_id):
+            req.status = "refused"
+            req.error = f"chaos:{TRIGGER_CAPACITY}"
+            self.events.emit(
+                "scheduler_admission_refused",
+                request_id=req.request_id,
+                blocking_claim_ids=[],
+                conflict_action="refuse",
+                stage="capacity_pressure",
+            )
+            self.fail_closed.increment(TRIGGER_CAPACITY)
+            self.events.emit(
+                "request_finished", request_id=req.request_id, status="REFUSED_ADMISSION"
+            )
+            return None
+
         # --- dense cache-shape ceiling (fail closed, not silent truncation) ---
         # The dense path writes prefill KV into a fixed [cache_len] cache;
         # a longer prompt would silently drop leading KV (make_cache keeps
@@ -352,6 +377,7 @@ class ServingEngine(EngineCore):
                 conflict_action="refuse",
                 stage="cache_shape",
             )
+            self.fail_closed.increment("dense_cache_overflow")
             self.events.emit(
                 "request_finished", request_id=req.request_id, status="REFUSED_ADMISSION"
             )
@@ -374,6 +400,7 @@ class ServingEngine(EngineCore):
         if refusal is not None:
             req.status = "refused"
             req.error = refusal.reason
+            self.fail_closed.increment("admission_conflict")
             self.events.emit(
                 "request_finished", request_id=req.request_id, status="REFUSED_ADMISSION"
             )
@@ -768,6 +795,7 @@ class ServingEngine(EngineCore):
         request with blocking-claim attribution (per-request isolation)."""
         req.status = "refused"
         req.error = str(e)
+        self.fail_closed.increment("allocation_conflict")
         self.events.emit(
             "scheduler_admission_refused",
             request_id=req.request_id,

@@ -50,6 +50,9 @@ class KVBlock:
     last_use: float = 0.0
     page_index: Optional[int] = None  # slot in the device page store, if paged
     _released_nbytes: int = 0  # payload size while spilled (k/v are None)
+    # content checksum written at first spill, verified at restore, cleared
+    # on verified readmit (chaos.payload_checksum) — None while device-resident
+    checksum: Optional[str] = None
 
     @property
     def nbytes(self) -> int:

@@ -1,4 +1,4 @@
-"""Tiered transfer backend: store/load jobs, async worker, failure injection.
+"""Tiered transfer backend: store/load jobs, async worker, fault handling.
 
 Mirrors the shape of vLLM's OffloadingConnector (store/load job creation,
 worker transfer submission/completion, failed-load propagation) as described
@@ -15,15 +15,31 @@ hierarchy (device / host DRAM / disk — see serving/tiers.py):
     kernel gather on the async transfer queue (serving/transfer_queue.py)
     instead of per-block copies.
 
-Failure injection semantics follow the paper, generalized to any tier
-boundary:
-  - disabled unless the resident-claim load-failure flag is enabled;
-  - when enabled it matches restores into the device pool — any
-    ``*_to_device`` direction ("CPU -> GPU" in the paper's two-tier world);
-  - ``fail_tier_boundary`` pins the hook to one specific boundary instead
-    (e.g. "disk_to_device", "host_to_disk");
-  - can filter by claim id; unclaimed generic failures require a separate
-    flag.
+Fault semantics (chaos.py; the legacy one-shot FailureInjectionConfig is
+kept and classified as ``injected_load_failure``):
+
+  - **transient_io**: the per-block attempt raises
+    ``TransientTransferFault``; the transfer queue backs off and re-runs
+    the (resumable) job fn, which redraws at the faulted block.  After
+    ``retry_policy.max_attempts`` attempts the block escalates to a
+    permanent failure with trigger ``transient_exhausted``.
+  - **permanent_io / corruption / injected**: the block fails once and for
+    good — E4(ok=False) + E11 for loads, and the JOB carries the first
+    failure's (reason, trigger) so the engine's invalid-KV-load boundary
+    can attribute the claim-scoped refusal exactly.
+  - **worker_death**: raised THROUGH the job fn; the queue poisons the job
+    and the engine-side join converts ``TransferWorkerDied`` into the same
+    ordered fail-closed path (E4 fail + E11 emitted at the join, still
+    strictly before any lifecycle event).
+  - **checksum verification**: every restored payload is verified against
+    the checksum written at first spill (tiers.py); a mismatch is a
+    ``corruption`` failure — the bytes never reach the device pool.
+  - **quarantine** (``TierHealth``): ``quarantine_after`` consecutive
+    failing jobs against one tier mark it degraded (``tier_quarantined``
+    boundary event).  From then on the tier is never touched: restores
+    from it fail immediately with trigger ``tier_quarantined`` (claim-
+    scoped refusal upstream), stores targeting it are refused, and spills
+    into it keep the blocks up-tier (fail-closed, not lost).
 """
 from __future__ import annotations
 
@@ -33,9 +49,27 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
+from repro.serving.chaos import (
+    FaultPlan,
+    TierHealth,
+    TransientTransferFault,
+    WorkerKilled,
+    payload_checksum,
+    TRIGGER_CORRUPTION,
+    TRIGGER_INJECTED,
+    TRIGGER_QUARANTINE,
+    TRIGGER_TRANSIENT_EXHAUSTED,
+    TRIGGER_WORKER_DEATH,
+)
 from repro.serving.kv_cache import BlockPool, KVBlock, chain_hash
 from repro.serving.tiers import DiskTier, HostTier, TieredStore
-from repro.serving.transfer_queue import TransferJob, TransferQueue
+from repro.serving.transfer_queue import (
+    DEFAULT_RETRY_POLICY,
+    RetryPolicy,
+    TransferJob,
+    TransferQueue,
+    TransferWorkerDied,
+)
 
 
 @dataclass
@@ -66,6 +100,8 @@ class FailureInjectionConfig:
 class TransferResult:
     ok: bool
     reason: str = ""
+    trigger: Optional[str] = None
+    transient: bool = False
 
 
 @dataclass
@@ -78,6 +114,11 @@ class OffloadJob:
     done: bool = False
     ok: bool = True
     tier: str = "host"
+    # first per-block failure wins: the engine attributes the claim-scoped
+    # outcome (refusal reason + fail_closed_total trigger) from these
+    failure_reason: str = ""
+    failure_trigger: Optional[str] = None
+    retries: int = 0
 
 
 class OffloadingConnector:
@@ -92,6 +133,9 @@ class OffloadingConnector:
         *,
         disk_pool: Optional[DiskTier] = None,
         queue: Optional[TransferQueue] = None,
+        fault_plan: Optional[FaultPlan] = None,
+        retry_policy: Optional[RetryPolicy] = None,
+        quarantine_after: Optional[int] = 3,
     ):
         from repro.core.events import EventLog
 
@@ -102,6 +146,12 @@ class OffloadingConnector:
         self._events = event_log if event_log is not None else EventLog()
         self.injection = injection or FailureInjectionConfig()
         self.queue = queue or TransferQueue()
+        self.plan = fault_plan
+        for tier in self.tiers.tiers:
+            tier.fault_plan = fault_plan  # corruption draws at tier put
+        self.retry_policy = retry_policy or DEFAULT_RETRY_POLICY
+        self.health = TierHealth(quarantine_after)
+        self.retry_histogram: Dict[int, int] = {}  # attempt# -> count
         self._job_ids = itertools.count()
         self.jobs: Dict[int, OffloadJob] = {}
 
@@ -186,16 +236,55 @@ class OffloadingConnector:
             tier=tier,
         )
 
+        # resumable state: a transient fault re-runs this fn and it
+        # continues at the faulted block (see transfer_queue retry loop)
+        st = {"i": 0, "results": [], "finalized": False, "attempts": {}, "spill_attempts": {}}
+
         def _run() -> None:
             target = self.tiers.by_name(tier)
             direction = f"device_to_{tier}"
-            self._transfer_blocks(blocks, direction, job, target_tier=target)
+            while st["i"] < len(blocks):
+                blk = blocks[st["i"]]
+                if self.health.is_quarantined(tier):
+                    res = TransferResult(
+                        False, f"tier_quarantined:{tier}", trigger=TRIGGER_QUARANTINE
+                    )
+                else:
+                    res = self._attempt_block(blk, direction, job, st["attempts"])
+                st["results"].append(res)
+                if not res.ok:
+                    job.ok = False
+                    self._record_job_failure(job, res)
+                st["i"] += 1
+            if not st["finalized"]:
+                st["finalized"] = True
+                self._finish_store(blocks, st["results"], direction, job, target)
+                self._record_tier_outcome(job, tier)
             if self.host.over_capacity:
-                self._spill_overflow(job)
+                self._spill_overflow(job, st["spill_attempts"])
             job.done = True
 
         self._submit_and_join(job, _run)
         return job
+
+    def _finish_store(self, blocks, results, direction, job, target_tier) -> None:
+        """Batched copy + E4 emissions + pool moves for a store job."""
+        survivors = [b for b, r in zip(blocks, results) if r.ok]
+        self._batched_copy(survivors, job)
+        for blk, res in zip(blocks, results):
+            self._events.emit(
+                "offload_worker_transfer_finished",
+                request_id=job.request_id,
+                claim_id=job.claim_id,
+                block_id=blk.block_id,
+                direction=direction,
+                ok=res.ok,
+                reason=res.reason,
+            )
+            if res.ok:
+                if blk.block_id in self.device.blocks:
+                    self.device.remove(blk.block_id, reason="offloaded")
+                target_tier.put(blk)
 
     def complete_job(self, job: OffloadJob) -> None:
         """Emit the job-completion boundary (E9) — ordered AFTER the engine's
@@ -229,83 +318,177 @@ class OffloadingConnector:
             block_ids=job.block_ids,
         )
 
+        st = {
+            "i": 0,
+            "survivors": [],
+            "finalized": False,
+            "attempts": {},
+            "tiers": set(),       # every source tier this job touched
+            "tier_fail": set(),   # source tiers with >= 1 failing block
+        }
+
         def _run() -> None:
-            survivors: List[Tuple[KVBlock, str]] = []
-            for blk in blocks:
+            while st["i"] < len(blocks):
+                blk = blocks[st["i"]]
                 src = self.tiers.tier_of_block(blk.block_id)
                 src_name = src.name if src is not None else "host"
                 direction = f"{src_name}_to_device"
-                res = self._worker_submit(blk, direction, job.claim_id, job.request_id)
-                if not res.ok:
-                    job.ok = False
-                    self._events.emit(
-                        "offload_worker_transfer_finished",
-                        request_id=job.request_id,
-                        claim_id=job.claim_id,
-                        block_id=blk.block_id,
-                        direction=direction,
-                        ok=False,
-                        reason=res.reason,
+                st["tiers"].add(src_name)
+                if self.health.is_quarantined(src_name):
+                    # degraded tier: fail the block WITHOUT touching it
+                    self._fail_load_block(
+                        job,
+                        blk,
+                        direction,
+                        TransferResult(
+                            False,
+                            f"tier_quarantined:{src_name}",
+                            trigger=TRIGGER_QUARANTINE,
+                        ),
                     )
-                    self._events.emit(
-                        "offload_worker_load_failed",
-                        request_id=job.request_id,
-                        claim_id=job.claim_id,
-                        block_id=blk.block_id,
-                        reason=res.reason,
-                    )
-                    # failed bytes never reach the device pool — the KV is absent
+                    st["tier_fail"].add(src_name)
+                    st["i"] += 1
                     continue
-                survivors.append((blk, src_name))
+                res = self._attempt_block(blk, direction, job, st["attempts"])
+                if not res.ok:
+                    self._fail_load_block(job, blk, direction, res)
+                    st["tier_fail"].add(src_name)
+                    st["i"] += 1
+                    continue
+                st["survivors"].append((blk, src_name))
+                st["i"] += 1
 
-            if survivors:
-                # pop from source tiers (a disk pop re-reads the spilled
-                # bytes), then move every payload in ONE batched gather
-                popped = []
-                for blk, src_name in survivors:
-                    tier = self.tiers.by_name(src_name)
-                    popped.append((tier.pop(blk.block_id), src_name))
-                self._batched_copy([b for b, _ in popped], job)
-                for blk, src_name in popped:
-                    direction = f"{src_name}_to_device"
-                    if src_name != "host":
-                        self._events.emit(
-                            "offload_tier_promote",
-                            claim_id=job.claim_id,
-                            block_id=blk.block_id,
-                            from_tier=src_name,
-                            to_tier="device",
-                        )
-                    if self.device.free_slots <= 0:
-                        self.device.evict(1, protected_claims=protected_claims or set())
-                    # restore lands the BLOCK in a device page slot: the
-                    # payload becomes attendable in place through block
-                    # tables, with no dense-slab assembly step
-                    self.device.readmit(blk)
+            if st["finalized"]:
+                job.done = True
+                return
+            st["finalized"] = True
+            # pop from source tiers (a disk pop re-reads the spilled
+            # bytes), verify integrity, then move every payload in ONE
+            # batched gather
+            popped = []
+            for blk, src_name in st["survivors"]:
+                tier = self.tiers.by_name(src_name)
+                blk = tier.pop(blk.block_id)
+                if blk.checksum is not None and payload_checksum(blk.k, blk.v) != blk.checksum:
+                    # corruption at rest: the bytes NEVER reach the device
+                    # pool — claim-scoped refusal upstream, not bad logits
+                    self._fail_load_block(
+                        job,
+                        blk,
+                        f"{src_name}_to_device",
+                        TransferResult(
+                            False,
+                            f"chaos:{TRIGGER_CORRUPTION}@{src_name}:checksum_mismatch",
+                            trigger=TRIGGER_CORRUPTION,
+                        ),
+                    )
+                    st["tier_fail"].add(src_name)
+                    continue
+                popped.append((blk, src_name))
+            self._batched_copy([b for b, _ in popped], job)
+            for blk, src_name in popped:
+                direction = f"{src_name}_to_device"
+                if src_name != "host":
                     self._events.emit(
-                        "offload_worker_transfer_finished",
-                        request_id=job.request_id,
+                        "offload_tier_promote",
                         claim_id=job.claim_id,
                         block_id=blk.block_id,
-                        direction=direction,
-                        ok=True,
-                        reason="",
+                        from_tier=src_name,
+                        to_tier="device",
                     )
-                    self._events.emit(
-                        "block_stored",
-                        block_id=blk.block_id,
-                        chain=blk.chain,
-                        n_tokens=len(blk.tokens),
-                    )
+                if self.device.free_slots <= 0:
+                    self.device.evict(1, protected_claims=protected_claims or set())
+                # restore lands the BLOCK in a device page slot: the
+                # payload becomes attendable in place through block
+                # tables, with no dense-slab assembly step
+                blk.checksum = None  # verified; device-resident again
+                self.device.readmit(blk)
+                self._events.emit(
+                    "offload_worker_transfer_finished",
+                    request_id=job.request_id,
+                    claim_id=job.claim_id,
+                    block_id=blk.block_id,
+                    direction=direction,
+                    ok=True,
+                    reason="",
+                )
+                self._events.emit(
+                    "block_stored",
+                    block_id=blk.block_id,
+                    chain=blk.chain,
+                    n_tokens=len(blk.tokens),
+                )
+            # per-tier health: failure for tiers with failing blocks,
+            # success for tiers whose blocks ALL made it
+            for src_name in sorted(st["tier_fail"]):
+                self._record_tier_failure(job, src_name)
+            for src_name in sorted(st["tiers"] - st["tier_fail"]):
+                self.health.record_job_success(src_name)
             job.done = True
 
         self._submit_and_join(job, _run)
         return job
 
+    def _fail_load_block(
+        self, job: OffloadJob, blk: KVBlock, direction: str, res: TransferResult
+    ) -> None:
+        """Per-block load failure: E4(ok=False) + E11, job attribution.
+        The failed bytes never reach the device pool — the KV is absent."""
+        job.ok = False
+        self._record_job_failure(job, res)
+        self._events.emit(
+            "offload_worker_transfer_finished",
+            request_id=job.request_id,
+            claim_id=job.claim_id,
+            block_id=blk.block_id,
+            direction=direction,
+            ok=False,
+            reason=res.reason,
+        )
+        self._events.emit(
+            "offload_worker_load_failed",
+            request_id=job.request_id,
+            claim_id=job.claim_id,
+            block_id=blk.block_id,
+            reason=res.reason,
+        )
+
+    @staticmethod
+    def _record_job_failure(job: OffloadJob, res: TransferResult) -> None:
+        if job.failure_trigger is None:
+            job.failure_trigger = res.trigger or TRIGGER_INJECTED
+            job.failure_reason = res.reason
+
+    def _record_tier_outcome(self, job: OffloadJob, tier_name: str) -> None:
+        """Job-level health accounting (one multi-block job counts once):
+        crossing the consecutive-failure threshold quarantines the tier."""
+        if tier_name == "device":
+            return
+        if job.ok:
+            self.health.record_job_success(tier_name)
+        else:
+            self._record_tier_failure(job, tier_name)
+
+    def _record_tier_failure(self, job: OffloadJob, tier_name: str) -> None:
+        if tier_name == "device":
+            return
+        if self.health.record_job_failure(tier_name):
+            self._events.emit(
+                "tier_quarantined",
+                claim_id=job.claim_id,
+                tier=tier_name,
+                consecutive_failures=self.health.consecutive_failures(tier_name),
+                trigger=job.failure_trigger,
+            )
+
     # -- worker internals ---------------------------------------------------------
     def _submit_and_join(self, job: OffloadJob, fn) -> None:
         """Enqueue on the async worker and join before returning: the engine's
-        next event must be ordered after every transfer event of this job."""
+        next event must be ordered after every transfer event of this job.
+
+        A worker death (or retry-budget backstop) surfaces HERE — converted
+        into per-job failure attribution so the caller's lifecycle handling
+        stays the one ordered fail-closed path, never a crash."""
         self._events.emit(
             "transfer_job_enqueued",
             request_id=job.request_id,
@@ -314,12 +497,93 @@ class OffloadingConnector:
             kind=job.kind,
             n_blocks=len(job.block_ids),
         )
-        tjob = TransferJob(job.job_id, job.kind, fn)
+        tjob = TransferJob(job.job_id, job.kind, fn, policy=self.retry_policy)
         self.queue.submit(tjob)
-        tjob.wait()
+        try:
+            tjob.wait()
+        except TransferWorkerDied as e:
+            self._job_fault_at_join(
+                job, e.block_id, e.direction, str(e), TRIGGER_WORKER_DEATH
+            )
+        except TransientTransferFault as e:  # queue's runaway backstop
+            self._job_fault_at_join(
+                job, e.block_id, e.direction, str(e), TRIGGER_TRANSIENT_EXHAUSTED
+            )
+
+    def _job_fault_at_join(
+        self, job: OffloadJob, block_id, direction, reason: str, trigger: str
+    ) -> None:
+        """Terminalize a job whose fn did not run to completion: emit the
+        failure evidence (E4 fail, and E11 for loads) at the join point —
+        still strictly before any engine lifecycle event."""
+        job.ok = False
+        self._record_job_failure(job, TransferResult(False, reason, trigger=trigger))
+        self._events.emit(
+            "offload_worker_transfer_finished",
+            request_id=job.request_id,
+            claim_id=job.claim_id,
+            block_id=block_id,
+            direction=direction or "",
+            ok=False,
+            reason=reason,
+        )
+        if job.kind == "load":
+            self._events.emit(
+                "offload_worker_load_failed",
+                request_id=job.request_id,
+                claim_id=job.claim_id,
+                block_id=block_id,
+                reason=reason,
+            )
+        if direction and job.kind == "load":
+            self._record_tier_failure(job, direction.split("_to_")[0])
+        job.done = True
+
+    def _attempt_block(
+        self, blk: KVBlock, direction: str, job: OffloadJob, attempts: Dict[int, int]
+    ) -> TransferResult:
+        """One per-block transfer attempt with transient-retry escalation.
+
+        Transient faults below the retry budget raise
+        ``TransientTransferFault`` (the queue backs off and re-runs the
+        resumable fn); at budget they escalate to a permanent
+        ``transient_exhausted`` failure.  Worker-death faults raise
+        ``WorkerKilled`` through the queue."""
+        att = attempts.get(blk.block_id, 0) + 1
+        attempts[blk.block_id] = att
+        res = self._worker_submit(blk, direction, job.claim_id, job.request_id, attempt=att)
+        if res.ok or not res.transient:
+            return res
+        if att < self.retry_policy.max_attempts:
+            job.retries += 1
+            self.retry_histogram[att] = self.retry_histogram.get(att, 0) + 1
+            self._events.emit(
+                "transfer_retry_scheduled",
+                request_id=job.request_id,
+                claim_id=job.claim_id,
+                job_id=job.job_id,
+                block_id=blk.block_id,
+                direction=direction,
+                attempt=att,
+                max_attempts=self.retry_policy.max_attempts,
+                delay_s=self.retry_policy.delay_s(att),
+                reason=res.reason,
+            )
+            raise TransientTransferFault(res.reason, blk.block_id, direction)
+        return TransferResult(
+            False,
+            f"{res.reason}:exhausted_after_{att}_attempts",
+            trigger=TRIGGER_TRANSIENT_EXHAUSTED,
+        )
 
     def _worker_submit(
-        self, blk: KVBlock, direction: str, claim_id: Optional[str], request_id: Optional[str]
+        self,
+        blk: KVBlock,
+        direction: str,
+        claim_id: Optional[str],
+        request_id: Optional[str],
+        *,
+        attempt: int = 1,
     ) -> TransferResult:
         """Emit the per-block submission event (E3) and decide injection."""
         self._events.emit(
@@ -329,10 +593,21 @@ class OffloadingConnector:
             block_id=blk.block_id,
             direction=direction,
             nbytes=blk.nbytes,
+            attempt=attempt,
         )
         claim_ids = set(blk.claim_ids) | ({claim_id} if claim_id else set())
         if self.injection.should_fail(direction, claim_ids):
-            return TransferResult(False, self.injection.failure_reason)
+            return TransferResult(
+                False, self.injection.failure_reason, trigger=TRIGGER_INJECTED
+            )
+        if self.plan is not None:
+            fault = self.plan.draw_transfer(direction, claim_ids, blk.block_id, attempt)
+            if fault is not None:
+                if fault.trigger == TRIGGER_WORKER_DEATH:
+                    raise WorkerKilled(fault.reason, blk.block_id, direction)
+                return TransferResult(
+                    False, fault.reason, trigger=fault.trigger, transient=fault.transient
+                )
         return TransferResult(True)
 
     def _batched_copy(self, blocks: List[KVBlock], job: OffloadJob) -> None:
@@ -360,44 +635,32 @@ class OffloadingConnector:
                 nbytes=sum(b.nbytes for b in blocks),
             )
 
-    def _transfer_blocks(self, blocks: List[KVBlock], direction: str, job: OffloadJob, *, target_tier) -> List[KVBlock]:
-        """Store-side per-block transfer: E3/E4 events, injection, batched copy,
-        then the pool moves.  Returns the blocks that actually moved."""
-        survivors: List[KVBlock] = []
-        results: List[TransferResult] = []
-        for blk in blocks:
-            res = self._worker_submit(blk, direction, job.claim_id, job.request_id)
-            results.append(res)
-            if res.ok:
-                survivors.append(blk)
-            else:
-                job.ok = False
-        self._batched_copy(survivors, job)
-        for blk, res in zip(blocks, results):
-            self._events.emit(
-                "offload_worker_transfer_finished",
-                request_id=job.request_id,
-                claim_id=job.claim_id,
-                block_id=blk.block_id,
-                direction=direction,
-                ok=res.ok,
-                reason=res.reason,
-            )
-            if res.ok:
-                if blk.block_id in self.device.blocks:
-                    self.device.remove(blk.block_id, reason="offloaded")
-                target_tier.put(blk)
-        return survivors
-
     # -- spill policy (host overflow -> disk) -------------------------------------
-    def _spill_overflow(self, job: OffloadJob) -> None:
+    def _spill_overflow(self, job: OffloadJob, attempts: Optional[Dict[int, int]] = None) -> None:
         """Demote the host tier's oldest blocks to disk until within capacity.
 
         A spill failure is fail-closed for the block: it stays resident in
-        the host tier (over capacity) rather than being dropped.
-        """
+        the host tier (over capacity) rather than being dropped.  The loop
+        is resumable by construction — already-spilled blocks are no longer
+        candidates, and a permanently-failed block is skipped per pass.
+        Spills into a quarantined disk tier are refused up front (the
+        blocks stay host-resident)."""
+        if self.health.is_quarantined("disk"):
+            for blk in self.tiers.spill_candidates():
+                self._events.emit(
+                    "offload_worker_transfer_finished",
+                    request_id=job.request_id,
+                    claim_id=job.claim_id,
+                    block_id=blk.block_id,
+                    direction="host_to_disk",
+                    ok=False,
+                    reason="tier_quarantined:disk",
+                )
+            return
+        if attempts is None:
+            attempts = {}
         for blk in self.tiers.spill_candidates():
-            res = self._worker_submit(blk, "host_to_disk", job.claim_id, job.request_id)
+            res = self._attempt_block(blk, "host_to_disk", job, attempts)
             self._events.emit(
                 "offload_worker_transfer_finished",
                 request_id=job.request_id,

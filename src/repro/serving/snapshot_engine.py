@@ -88,6 +88,9 @@ class SnapshotEngine(EngineCore):
         injection: Optional[FailureInjectionConfig] = None,
         host_blocks: Optional[int] = None,
         disk_dir=None,
+        fault_plan=None,
+        retry_policy=None,
+        quarantine_after: Optional[int] = 3,
     ):
         # hybrid archs carry a window-KV half alongside the state
         super().__init__(
@@ -100,6 +103,9 @@ class SnapshotEngine(EngineCore):
             injection=injection,
             host_blocks=host_blocks,
             disk_dir=disk_dir,
+            fault_plan=fault_plan,
+            retry_policy=retry_policy,
+            quarantine_after=quarantine_after,
         )
         self._snapshot_meta: Dict[str, object] = {}  # chain -> reconstruction spec
 

@@ -18,6 +18,13 @@ Every tier exposes the same minimal surface (``blocks``, ``by_chain``,
 tiers uniformly — which is what lets failure injection work at every tier
 boundary (see offload.FailureInjectionConfig).  Chain lookups go through
 ``TieredStore.find_chain`` (and the connector's prefix walks on top of it).
+
+Integrity: a block's content checksum is written at its FIRST spill off the
+device (``chaos.payload_checksum``) and carried down-tier unchanged; the
+connector verifies it at restore, so corruption at rest (including the
+chaos plan's injected byte flips, which happen AFTER the checksum) becomes
+a fail-closed refusal rather than wrong logits.  The connector installs the
+engine's ``FaultPlan`` on each tier as ``fault_plan``.
 """
 from __future__ import annotations
 
@@ -28,6 +35,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.serving.chaos import corrupted_copy, payload_checksum
 from repro.serving.kv_cache import KVBlock
 
 
@@ -35,6 +43,7 @@ class HostTier:
     """Host-side (CPU DRAM) block store.  Drop-in for the old ``HostPool``."""
 
     name = "host"
+    fault_plan = None  # installed by the connector when chaos is enabled
 
     def __init__(self, capacity_blocks: Optional[int] = None) -> None:
         self.capacity = capacity_blocks  # None = unbounded
@@ -54,6 +63,12 @@ class HostTier:
         # A block arriving from the device pool may still be a view of its
         # (now freed) page slot: take ownership of the bytes host-side.
         blk.detach_payload()
+        if blk.checksum is None:
+            blk.checksum = payload_checksum(blk.k, blk.v)
+        if self.fault_plan is not None and self.fault_plan.draw_corruption(
+            self.name, blk.claim_ids, blk.block_id
+        ):
+            blk.k = corrupted_copy(blk.k)  # at-rest corruption, post-checksum
         blk.location = self.name
         self.blocks[blk.block_id] = blk
         self.by_chain[blk.chain] = blk.block_id
@@ -81,6 +96,7 @@ class DiskTier:
     """
 
     name = "disk"
+    fault_plan = None  # installed by the connector when chaos is enabled
 
     def __init__(self, spill_dir: Optional[Path] = None) -> None:
         # Directory creation is lazy: benches spin up hundreds of engines
@@ -104,9 +120,26 @@ class DiskTier:
                 self.dir.mkdir(parents=True, exist_ok=True)
         return self.dir
 
-    def __del__(self):  # pragma: no cover - best-effort cleanup
-        if self._tmp:
+    def close(self) -> None:
+        """Explicit teardown: unlink every spill file and remove the tier's
+        own temp directory.  Idempotent; replaces the old ``__del__`` so no
+        cleanup ever runs during interpreter shutdown.  Called from
+        ``EngineCore.close()`` (or use the tier as a context manager)."""
+        for path in self._files.values():
+            path.unlink(missing_ok=True)
+        self._files.clear()
+        self.blocks.clear()
+        self.by_chain.clear()
+        if self._tmp is not None:
             shutil.rmtree(self._tmp, ignore_errors=True)
+            self._tmp = None
+        self.dir = None
+
+    def __enter__(self) -> "DiskTier":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     @property
     def used(self) -> int:
@@ -132,13 +165,23 @@ class DiskTier:
 
     def put(self, blk: KVBlock) -> None:
         path = self._ensure_dir() / f"blk-{blk.block_id:06d}-{blk.chain}.npz"
+        if blk.checksum is None:
+            blk.checksum = payload_checksum(blk.k, blk.v)
         k_buf, k_dt, k_shape = self._encode(blk.k)
         v_buf, v_dt, v_shape = self._encode(blk.v)
+        if self.fault_plan is not None and self.fault_plan.draw_corruption(
+            self.name, blk.claim_ids, blk.block_id
+        ):
+            # at-rest corruption, post-checksum (copy: k_buf may view pages)
+            if k_buf.size:
+                k_buf = k_buf.copy()
+                k_buf[0] ^= 0xFF
         np.savez(
             path,
             k=k_buf, k_dtype=k_dt, k_shape=np.asarray(k_shape, np.int64),
             v=v_buf, v_dtype=v_dt, v_shape=np.asarray(v_shape, np.int64),
             positions=np.asarray(blk.positions),
+            checksum=np.asarray(blk.checksum),
         )
         self.bytes_written += blk.nbytes
         blk.release_payload()  # record nbytes, drop the RAM arrays

@@ -289,3 +289,51 @@ def test_batch_failure_isolation(kv):
     v = check_failure_outcome_path(eng.events, target.claim_id, r_target.request_id)
     assert v.passed, v.reasons
     assert validate_event_sequence(eng.events).passed
+
+
+def _blast_radius_run(kv, fault: bool):
+    """One scripted serving session: a bystander claim's full lifecycle runs
+    BEFORE a (possibly) faulted victim reuse.  Returns the bystander's
+    request, claim state and request-scoped event stream."""
+    from repro.serving.chaos import FaultPlan, FaultSpec, TRIGGER_PERMANENT
+
+    plan = FaultPlan(seed=99)
+    eng = kv.make_engine(device_blocks=256, fault_plan=plan, quarantine_after=None)
+    vp, bp = tuple(range(800, 816)), tuple(range(900, 916))
+    victim = eng.accept_claim(vp, ClaimMode.OFFLOADABLE)
+    bystander = eng.accept_claim(bp, ClaimMode.OFFLOADABLE)
+    for pfx in (vp, bp):
+        eng.run(eng.submit(pfx + (5, 6), max_new_tokens=1))
+    eng.offload_claim(victim.claim_id)
+    eng.offload_claim(bystander.claim_id, tier="disk")
+    if fault:
+        plan.schedule(
+            FaultSpec(
+                TRIGGER_PERMANENT, boundary="host_to_device", claim_id=victim.claim_id
+            )
+        )
+    r_by = eng.submit(bp + (7, 8), max_new_tokens=3)
+    eng.run(r_by)
+    r_victim = eng.submit(vp + (7, 8), max_new_tokens=3)
+    eng.run(r_victim)
+    by_events = [
+        (e.name, e.payload) for e in eng.events.for_request(r_by.request_id)
+    ]
+    out = (r_by.output_tokens, r_by.status, bystander.state, by_events, r_victim.status)
+    eng.close()
+    return out
+
+
+def test_fault_blast_radius_bystander_byte_identical(kv):
+    """Injecting a permanent fault against ONE claim leaves a bucket-mate's
+    outputs, claim state and request-scoped event stream byte-identical to a
+    fault-free run (seq numbers aside, which the per-request projection
+    already strips from the comparison): the fault plan's draws are
+    stateless per site, so one claim's faults cannot shift another's."""
+    toks_f, status_f, state_f, events_f, victim_f = _blast_radius_run(kv, fault=True)
+    toks_c, status_c, state_c, events_c, victim_c = _blast_radius_run(kv, fault=False)
+    assert victim_f == "refused" and victim_c == "finished"  # the fault fired
+    assert toks_f == toks_c
+    assert status_f == status_c == "finished"
+    assert state_f == state_c == ClaimState.RESTORED
+    assert events_f == events_c
