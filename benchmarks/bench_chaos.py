@@ -25,14 +25,24 @@ permanent-fault restore jobs against disk quarantine the tier
 refused with trigger ``tier_quarantined`` WITHOUT touching disk (bytes_read
 frozen), while a host-resident claim keeps serving.
 
-Summary (counters, refusal rates, retry histogram) merges into
-``results/BENCH_serving.json`` under ``"chaos_campaign"``.
+Telemetry rides the same gate (PR 7): every engine's metrics registry must
+reconcile against its event log (``check_metrics_reconcile`` — counter or
+histogram drift from the ordered witnesses is a campaign failure), and the
+quarantine-phase engine exports the observability artifacts:
+``results/chaos_trace.json`` (Perfetto trace-event JSON covering refused
+AND successful claims), ``results/chaos_metrics.prom`` /
+``results/chaos_metrics.json`` (Prometheus exposition + snapshot).
+
+Summary (counters, refusal rates, retry histogram, p50/p95/p99 stage
+latencies) merges into ``results/BENCH_serving.json`` under
+``"chaos_campaign"``.
 
   PYTHONPATH=src python benchmarks/bench_chaos.py [--fast]
 """
 from __future__ import annotations
 
 import json
+import math
 import random
 import sys
 import time
@@ -40,6 +50,7 @@ from pathlib import Path
 
 from repro.core.analyzer import (
     check_fail_closed_attribution,
+    check_metrics_reconcile,
     check_retry_bounded,
     validate_event_sequence,
 )
@@ -70,9 +81,36 @@ def _check_engine_trace(eng, max_attempts: int, violations: list) -> None:
         ("sequence", validate_event_sequence(eng.events)),
         ("fail_closed_attribution", check_fail_closed_attribution(eng.events)),
         ("retry_bounded", check_retry_bounded(eng.events, max_attempts)),
+        ("metrics_reconcile", check_metrics_reconcile(eng.events, eng.metrics)),
     ):
         if not verdict.passed:
             violations.append(f"{name}: {verdict.reasons}")
+
+
+def _collect_latencies(eng, acc: dict) -> None:
+    """Pool raw stage/transfer latency samples across engines for the
+    campaign-wide percentile export."""
+    for stage in ("prefill", "prefill_chunk", "decode_step", "restore"):
+        xs = eng.stage_seconds.samples(stage=stage)
+        if xs:
+            acc.setdefault(stage, []).extend(xs)
+    xs = eng.connector._m_transfer.samples()
+    if xs:
+        acc.setdefault("transfer", []).extend(xs)
+
+
+def _percentiles_ms(acc: dict) -> dict:
+    """Nearest-rank p50/p95/p99 in milliseconds per stage."""
+    out = {}
+    for stage, xs in sorted(acc.items()):
+        s = sorted(xs)
+        pcts = {}
+        for q in (50, 95, 99):
+            rank = max(0, min(len(s) - 1, math.ceil(q / 100 * len(s)) - 1))
+            pcts[f"p{q}"] = round(s[rank] * 1e3, 4)
+        pcts["count"] = len(s)
+        out[stage] = pcts
+    return out
 
 
 def _build_rounds(rng: random.Random, fast: bool):
@@ -96,7 +134,7 @@ def _build_rounds(rng: random.Random, fast: bool):
     return rounds
 
 
-def run_campaign(make_engine, *, fast: bool) -> dict:
+def run_campaign(make_engine, *, fast: bool, latency_acc: dict) -> dict:
     rng = random.Random(SEED)
     rounds = _build_rounds(rng, fast)
 
@@ -192,6 +230,7 @@ def run_campaign(make_engine, *, fast: bool) -> dict:
         for k, v in expected.items():
             expected_total[k] = expected_total.get(k, 0) + v
         _check_engine_trace(eng, eng.connector.retry_policy.max_attempts, violations)
+        _collect_latencies(eng, latency_acc)
         for att, n in eng.connector.retry_histogram.items():
             retry_histogram[att] = retry_histogram.get(att, 0) + n
         n_retries += eng.connector.queue.retries_performed + sum(
@@ -214,10 +253,14 @@ def run_campaign(make_engine, *, fast: bool) -> dict:
     }
 
 
-def run_quarantine_phase(make_engine) -> dict:
+def run_quarantine_phase(make_engine, *, latency_acc: dict, artifacts_dir=None) -> dict:
     """Dedicated engine: repeated permanent restore failures quarantine disk;
     the engine keeps serving host-resident chains and refuses
-    offload-dependent admissions with ``tier_quarantined`` attribution."""
+    offload-dependent admissions with ``tier_quarantined`` attribution.
+
+    This engine's trace has BOTH refused and successful claims, so it is the
+    source of the exported observability artifacts (Perfetto trace +
+    Prometheus exposition + metrics snapshot) when ``artifacts_dir`` is set."""
     plan = FaultPlan(seed=SEED + 1)
     eng = make_engine(fault_plan=plan, quarantine_after=3, device_blocks=256, cache_len=64)
     base = 900_000
@@ -273,6 +316,10 @@ def run_quarantine_phase(make_engine) -> dict:
         _fail(f"quarantine phase order violations: {violations}")
     if plan.armed_remaining:
         _fail("quarantine phase: armed specs never consumed")
+    _collect_latencies(eng, latency_acc)
+    artifacts = {}
+    if artifacts_dir is not None:
+        artifacts = _export_artifacts(eng, Path(artifacts_dir))
     eng.close()
     return {
         "injected_faults": dict(sorted(plan.stats.injected.items())),
@@ -280,15 +327,52 @@ def run_quarantine_phase(make_engine) -> dict:
         "quarantined_tier": "disk",
         "host_served_through_quarantine": True,
         "disk_untouched_after_quarantine": True,
+        **({"artifacts": artifacts} if artifacts else {}),
+    }
+
+
+def _export_artifacts(eng, out_dir: Path) -> dict:
+    """Write the observability artifacts for one engine and gate on them:
+    the Perfetto trace must validate structurally AND cover at least one
+    refused and one successful claim-backed request."""
+    from repro.serving.tracing import build_spans, validate_perfetto, write_perfetto
+
+    out_dir.mkdir(parents=True, exist_ok=True)
+    trace_path = out_dir / "chaos_trace.json"
+    trace = write_perfetto(eng.events, trace_path)
+    problems = validate_perfetto(trace)
+    if problems:
+        _fail(f"exported Perfetto trace invalid: {problems}")
+    spans = build_spans(eng.events)
+    statuses = {s.args.get("status") for s in spans if s.name == "request"}
+    n_refusals = sum(1 for s in spans if s.name == "refusal")
+    if "FINISHED_OK" not in statuses or n_refusals == 0:
+        _fail(
+            f"trace must cover >=1 successful and >=1 refused claim "
+            f"(statuses={statuses}, refusals={n_refusals})"
+        )
+    prom_path = out_dir / "chaos_metrics.prom"
+    prom_path.write_text(eng.metrics.prometheus_text())
+    snap_path = out_dir / "chaos_metrics.json"
+    snap_path.write_text(eng.metrics.to_json())
+    return {
+        "perfetto_trace": str(trace_path),
+        "trace_events": len(trace["traceEvents"]),
+        "trace_refusal_spans": n_refusals,
+        "prometheus": str(prom_path),
+        "metrics_snapshot": str(snap_path),
     }
 
 
 def main() -> None:
     fast = "--fast" in sys.argv
     make_engine = default_engine_factory()
+    latency_acc: dict = {}
     t0 = time.perf_counter()
-    campaign = run_campaign(make_engine, fast=fast)
-    quarantine = run_quarantine_phase(make_engine)
+    campaign = run_campaign(make_engine, fast=fast, latency_acc=latency_acc)
+    quarantine = run_quarantine_phase(
+        make_engine, latency_acc=latency_acc, artifacts_dir="results"
+    )
     wall_s = round(time.perf_counter() - t0, 1)
 
     total_injected = campaign["injected_total"] + sum(
@@ -305,11 +389,13 @@ def main() -> None:
         "total_injected_faults": total_injected,
         "campaign": campaign,
         "quarantine_phase": quarantine,
+        "latency_percentiles_ms": _percentiles_ms(latency_acc),
         "gates": {
             "zero_crashes": True,
             "zero_order_violations": True,
             "zero_cross_claim_contamination": True,
             "exact_counter_attribution": True,
+            "metrics_reconcile": True,
             "min_injected_faults": min_faults,
         },
     }

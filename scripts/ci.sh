@@ -19,9 +19,17 @@
 # 3. Runs the seeded chaos campaign (benchmarks/bench_chaos.py): >= 200
 #    injected faults (transient/permanent/corruption/worker-death/
 #    capacity) plus the tier-quarantine phase, gating on zero crashes,
-#    zero analyzer order violations, zero cross-claim contamination, and
-#    fail_closed_total{trigger} matching the injected plan EXACTLY; the
-#    summary (counters, refusal rates, retry histogram) merges into
+#    zero analyzer order violations, zero cross-claim contamination,
+#    fail_closed_total{trigger} matching the injected plan EXACTLY, and
+#    metric<->event reconciliation (analyzer.check_metrics_reconcile) on
+#    EVERY engine's trace — counter or histogram drift from the ordered
+#    event-log witnesses fails the campaign.  The quarantine-phase engine
+#    exports the observability artifacts: results/chaos_trace.json
+#    (Perfetto trace-event JSON, validated, covering refused AND
+#    successful claims), results/chaos_metrics.prom (Prometheus text
+#    exposition) and results/chaos_metrics.json (registry snapshot).  The
+#    summary (counters, refusal rates, retry histogram, p50/p95/p99 stage
+#    latencies for prefill/decode/restore/transfer) merges into
 #    results/BENCH_serving.json under "chaos_campaign".
 set -euo pipefail
 cd "$(dirname "$0")/.."

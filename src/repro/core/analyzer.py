@@ -367,6 +367,158 @@ def check_retry_bounded(log: EventLog, max_attempts: int) -> Verdict:
     return Verdict(True, [f"{n_retries} retries bounded below {max_attempts}, all terminal"])
 
 
+# -- metric <-> event reconciliation ------------------------------------------
+
+# Refusal events whose ``trigger`` payload is the ordered witness for a
+# ``fail_closed_total{trigger}`` increment.  Every increment site in the
+# engines emits exactly one of these with the same trigger, so the tally
+# must match the counter in BOTH directions.
+FAIL_CLOSED_WITNESS_EVENTS = (
+    "scheduler_active_request_refused",
+    "scheduler_admission_refused",
+    "fail_closed_refused",
+)
+
+
+def _metrics_snapshot(metrics) -> dict:
+    """Accept either a serving.metrics.MetricsRegistry or its snapshot() dict.
+
+    Duck-typed on purpose: the analyzer (core/) must not import serving/."""
+    snap = metrics.snapshot() if hasattr(metrics, "snapshot") else metrics
+    if not isinstance(snap, dict):
+        raise TypeError(f"expected MetricsRegistry or snapshot dict, got {type(metrics)!r}")
+    return snap
+
+
+def _counter_series(snap: dict, name: str) -> dict:
+    """{label-values-tuple: value} for a counter family (empty if absent)."""
+    fam = snap.get(name)
+    if fam is None:
+        return {}
+    return {
+        tuple(sorted(s.get("labels", {}).items())): s.get("value", 0)
+        for s in fam.get("series", [])
+    }
+
+
+def _histogram_counts(snap: dict, name: str) -> dict:
+    fam = snap.get(name)
+    if fam is None:
+        return {}
+    return {
+        tuple(sorted(s.get("labels", {}).items())): s.get("count", 0)
+        for s in fam.get("series", [])
+    }
+
+
+def check_metrics_reconcile(log: EventLog, metrics) -> Verdict:
+    """Fail-closed metric<->event reconciliation (observability != containment).
+
+    The metrics registry is a derived view over the SAME run the event log
+    witnesses; any drift between the two means the telemetry has invented or
+    dropped an outcome.  Five rules, each checked in both directions:
+
+      1. ``fail_closed_total{trigger}`` equals the tally of ``trigger``
+         payloads across the refusal events (E13, admission refusals, and
+         ``fail_closed_refused`` — the ordered witnesses of every counter
+         increment site).  A counter value with no witness events, or
+         refusal events with no counter movement, both fail.
+      2. ``transfer_block_seconds`` total observation count equals the
+         number of E3->E4 pairs, replayed with the same pending-dict rule
+         the instrumentation uses: E3 opens (a retry's re-submission
+         re-opens) a ``(block_id, direction)`` slot, E4 consumes it;
+         an E4 with no open slot (e.g. a quarantined-tier refusal that
+         never submitted) contributes no observation.
+      3. ``claim_restores_total`` equals the count of E8
+         ``resident_claim_restored`` events.
+      4. ``transfer_retries_total`` (summed over directions) equals the
+         count of ``transfer_retry_scheduled`` events.
+      5. ``stage_seconds{stage}`` observation counts equal the per-stage
+         tally of ``stage_latency`` events.
+
+    ``metrics`` may be a live ``serving.metrics.MetricsRegistry`` or its
+    ``snapshot()`` dict (the serialized form the CI artifacts carry).
+    """
+    snap = _metrics_snapshot(metrics)
+    ev = log.events
+    reasons: List[str] = []
+
+    # rule 1: fail_closed_total{trigger} <-> refusal-event trigger tally
+    witnessed: dict = {}
+    for e in ev:
+        if e.name in FAIL_CLOSED_WITNESS_EVENTS:
+            trig = e.payload.get("trigger")
+            if trig is not None:
+                witnessed[trig] = witnessed.get(trig, 0) + 1
+    counted = {
+        dict(k).get("trigger"): v
+        for k, v in _counter_series(snap, "fail_closed_total").items()
+        if v  # zero-valued series reconcile against zero events
+    }
+    witnessed = {k: v for k, v in witnessed.items() if v}
+    if counted != witnessed:
+        only_counter = {k: v for k, v in counted.items() if witnessed.get(k) != v}
+        only_events = {k: v for k, v in witnessed.items() if counted.get(k) != v}
+        return Verdict.fail(
+            "fail_closed_total drifts from refusal events: "
+            f"counter={only_counter} events={only_events}"
+        )
+    reasons.append(f"fail_closed_total == refusal-event tally ({sum(witnessed.values())})")
+
+    # rule 2: transfer_block_seconds count <-> E3->E4 pair replay
+    pending: dict = {}
+    pairs = 0
+    for e in ev:
+        if e.name == "offload_worker_transfer_submitted":
+            pending[(e.payload.get("block_id"), e.payload.get("direction"))] = e.seq
+        elif e.name == "offload_worker_transfer_finished":
+            if pending.pop((e.payload.get("block_id"), e.payload.get("direction")), None) is not None:
+                pairs += 1
+    observed = sum(_histogram_counts(snap, "transfer_block_seconds").values())
+    if observed != pairs:
+        return Verdict.fail(
+            f"transfer_block_seconds count {observed} != E3->E4 pair count {pairs}"
+        )
+    reasons.append(f"transfer_block_seconds count == E3->E4 pairs ({pairs})")
+
+    # rule 3: claim_restores_total <-> E8 count
+    n_e8 = len(log.named("resident_claim_restored"))
+    restores = sum(_counter_series(snap, "claim_restores_total").values())
+    if restores != n_e8:
+        return Verdict.fail(f"claim_restores_total {restores} != E8 count {n_e8}")
+    reasons.append(f"claim_restores_total == E8 count ({n_e8})")
+
+    # rule 4: transfer_retries_total <-> retry events
+    n_retry_ev = len(log.named("transfer_retry_scheduled"))
+    n_retry_m = sum(_counter_series(snap, "transfer_retries_total").values())
+    if n_retry_m != n_retry_ev:
+        return Verdict.fail(
+            f"transfer_retries_total {n_retry_m} != transfer_retry_scheduled count {n_retry_ev}"
+        )
+    reasons.append(f"transfer_retries_total == retry events ({n_retry_ev})")
+
+    # rule 5: stage_seconds{stage} <-> stage_latency tally
+    stage_ev: dict = {}
+    for e in ev:
+        if e.name == "stage_latency":
+            s = e.payload.get("stage")
+            stage_ev[s] = stage_ev.get(s, 0) + 1
+    stage_m = {
+        dict(k).get("stage"): v
+        for k, v in _histogram_counts(snap, "stage_seconds").items()
+        if v
+    }
+    stage_ev = {k: v for k, v in stage_ev.items() if v}
+    if stage_m != stage_ev:
+        return Verdict.fail(
+            f"stage_seconds counts drift from stage_latency events: "
+            f"metrics={stage_m} events={stage_ev}"
+        )
+    reasons.append(f"stage_seconds == stage_latency tally ({sum(stage_ev.values())})")
+
+    return Verdict(True, reasons)
+
+
 # -- false-positive control checks (the analyzer must REJECT these) -----------
 
 

@@ -22,12 +22,16 @@ tables in EXPERIMENTS.md read one-to-one against the paper:
 
 Ordering is total (a monotonic sequence number assigned at emission); the
 analyzer (core/analyzer.py) consumes the order, never wall-clock time.
+Each event also carries a monotonic wall-clock ``ts`` (time.monotonic() at
+emission) used ONLY by the tracing layer (serving/tracing.py) to give spans
+duration — conformance checks never order by ``ts``.
 """
 from __future__ import annotations
 
 import itertools
 import json
 import threading
+import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, Iterable, List, Optional
 
@@ -80,6 +84,14 @@ NATIVE_EVENTS = (
     # explicit boundary event ordered before any quarantine-attributed refusal
     "transfer_retry_scheduled",
     "tier_quarantined",
+    # observability (serving/metrics.py, serving/tracing.py): a measured
+    # stage duration (request-scoped where applicable, payload carries
+    # stage + seconds), and a fail-closed refusal at a boundary that has
+    # no dedicated refusal event of its own (offload refusal, unclaimed
+    # load failure) so every fail_closed_total increment has exactly one
+    # ordered witness event — the reconciliation invariant
+    "stage_latency",
+    "fail_closed_refused",
 )
 
 ALL_EVENT_NAMES = frozenset(E.values()) | frozenset(NATIVE_EVENTS)
@@ -92,6 +104,10 @@ class Event:
     request_id: Optional[str] = None
     claim_id: Optional[str] = None
     payload: Dict[str, Any] = field(default_factory=dict)
+    # Monotonic wall-clock at emission (time.monotonic()).  Tracing-only:
+    # the analyzer orders by seq, never ts (ts ties are legal; seq ties
+    # are not).
+    ts: float = 0.0
 
     def to_dict(self) -> Dict[str, Any]:
         return {
@@ -99,6 +115,7 @@ class Event:
             "name": self.name,
             "request_id": self.request_id,
             "claim_id": self.claim_id,
+            "ts": self.ts,
             **{k: v for k, v in self.payload.items()},
         }
 
@@ -117,12 +134,20 @@ class EventLog:
         *,
         request_id: Optional[str] = None,
         claim_id: Optional[str] = None,
+        ts: Optional[float] = None,
         **payload: Any,
     ) -> Event:
         if name not in ALL_EVENT_NAMES:
             raise ValueError(f"unknown event name {name!r}")
         with self._lock:
-            ev = Event(next(self._counter), name, request_id, claim_id, payload)
+            ev = Event(
+                next(self._counter),
+                name,
+                request_id,
+                claim_id,
+                payload,
+                ts=time.monotonic() if ts is None else float(ts),
+            )
             self._events.append(ev)
         return ev
 
@@ -151,6 +176,7 @@ class EventLog:
                 r.pop("name"),
                 request_id=r.pop("request_id", None),
                 claim_id=r.pop("claim_id", None),
+                ts=r.pop("ts", None),
                 **{k: v for k, v in r.items() if k != "seq"},
             )
         return log

@@ -159,14 +159,23 @@ class FaultStats:
 
     injected: Dict[str, int] = field(default_factory=dict)
     records: List[Tuple[str, str, Optional[int]]] = field(default_factory=list)
+    # optional chaos_faults_injected_total{trigger} mirror (a
+    # metrics.CounterFamily bound by the engine owning this plan)
+    _counter: object = field(default=None, repr=False, compare=False)
 
     @property
     def total(self) -> int:
         return sum(self.injected.values())
 
+    def bind_metrics(self, counter) -> None:
+        """Mirror every future record into a registry counter family."""
+        self._counter = counter
+
     def record(self, trigger: str, site: str, block_id: Optional[int]) -> None:
         self.injected[trigger] = self.injected.get(trigger, 0) + 1
         self.records.append((trigger, site, block_id))
+        if self._counter is not None:
+            self._counter.increment(trigger)
 
 
 class FaultPlan:
@@ -315,29 +324,10 @@ class FaultPlan:
         return hit
 
 
-# --- fail-closed counter registry ---------------------------------------------
-class FailClosedCounters:
-    """``fail_closed_total{trigger=...}`` registry (ROADMAP item 5 / the
-    casf-core ADR-003 counter convention).  Every fail-closed outcome —
-    refusal, errored unclaimed load, quarantine-blocked offload — increments
-    exactly one trigger label; campaigns assert exact equality against the
-    injected plan."""
-
-    def __init__(self) -> None:
-        self._counts: Dict[str, int] = {}
-
-    def increment(self, trigger: str, n: int = 1) -> None:
-        self._counts[trigger] = self._counts.get(trigger, 0) + n
-
-    def total(self) -> int:
-        return sum(self._counts.values())
-
-    def as_dict(self) -> Dict[str, int]:
-        return dict(sorted(self._counts.items()))
-
-    def get(self, trigger: str) -> int:
-        return self._counts.get(trigger, 0)
-
+# NOTE: PR 6's FailClosedCounters lived here; it is now the
+# ``fail_closed_total{trigger}`` CounterFamily in serving/metrics.py —
+# one counting path, reconciled against the ordered event log by
+# core/analyzer.check_metrics_reconcile.
 
 # --- tier quarantine ----------------------------------------------------------
 class TierHealth:

@@ -21,6 +21,7 @@ demotion-before-loss) also lives here — one scheduler for both object kinds.
 from __future__ import annotations
 
 import itertools
+import time
 from dataclasses import dataclass, field
 from functools import lru_cache
 from typing import Dict, List, Optional, Sequence, Set, Tuple
@@ -38,11 +39,11 @@ from repro.core.claims import (
 )
 from repro.core.events import EventLog
 from repro.serving.chaos import (
-    FailClosedCounters,
     FaultPlan,
     TRIGGER_INJECTED,
 )
 from repro.serving.kv_cache import BlockPool, KVBlock, PoolExhausted
+from repro.serving.metrics import MetricsRegistry
 from repro.serving.offload import FailureInjectionConfig, OffloadingConnector
 from repro.serving.tiers import DiskTier, HostTier
 from repro.serving.transfer_queue import RetryPolicy
@@ -120,6 +121,7 @@ class Scheduler:
             free_blocks=free,
             evictable_blocks=evictable,
             conflict_action="refuse",
+            trigger="admission_conflict",
         )
         return SchedulerOutcome("admission_refused", blocking, "active/resident conflict")
 
@@ -254,9 +256,36 @@ class EngineCore:
         self.host = HostTier(host_blocks)
         self.disk = DiskTier(disk_dir)
         self.fault_plan = fault_plan
+        # Engine-scoped metrics registry: one per engine (campaigns spin up
+        # hundreds and must never share counter state).  Every family here
+        # is reconcilable against the ordered event log —
+        # core/analyzer.check_metrics_reconcile fails the suite on drift.
+        self.metrics = MetricsRegistry()
         # fail_closed_total{trigger=...}: every fail-closed outcome of this
-        # engine increments exactly one trigger label (ROADMAP item 5)
-        self.fail_closed = FailClosedCounters()
+        # engine increments exactly one trigger label (ROADMAP item 5),
+        # paired 1:1 with an ordered refusal event carrying the same trigger
+        self.fail_closed = self.metrics.counter(
+            "fail_closed_total",
+            "Fail-closed outcomes by trigger (refusals, errored unclaimed loads)",
+            labels=("trigger",),
+        )
+        self.stage_seconds = self.metrics.histogram(
+            "stage_seconds",
+            "Per-stage latency (prefill, prefill_chunk, decode_step, restore)",
+            labels=("stage",),
+        )
+        self.claim_restores = self.metrics.counter(
+            "claim_restores_total",
+            "Claims restored into the device pool (one per resident_claim_restored event)",
+        )
+        if fault_plan is not None:
+            fault_plan.stats.bind_metrics(
+                self.metrics.counter(
+                    "chaos_faults_injected_total",
+                    "Injected failing fault decisions by trigger (chaos plan ground truth)",
+                    labels=("trigger",),
+                )
+            )
         self.connector = OffloadingConnector(
             self.pool,
             self.host,
@@ -266,6 +295,7 @@ class EngineCore:
             fault_plan=fault_plan,
             retry_policy=retry_policy,
             quarantine_after=quarantine_after,
+            metrics=self.metrics,
         )
         self.scheduler = Scheduler(self.registry, self.pool, self.events)
         self._req_ids = itertools.count()
@@ -288,8 +318,22 @@ class EngineCore:
         self.close()
 
     def fail_closed_total(self) -> Dict[str, int]:
-        """Exported counter registry: trigger label -> count."""
+        """Exported counter view: trigger label -> count.  Backed by the
+        ``fail_closed_total{trigger}`` registry family — exactly what the
+        Prometheus exposition reports."""
         return self.fail_closed.as_dict()
+
+    def _observe_stage(self, stage: str, seconds: float) -> None:
+        """One measured stage duration: histogram observation + its ordered
+        witness event, emitted together so the per-stage histogram count
+        always equals the per-stage event count (reconciliation rule).
+
+        The event is engine-scoped (``request_id=None``): stage durations
+        are wall-clock and batch-wide, so binding them to a request would
+        break the byte-identity blast-radius comparisons that project
+        per-request (name, payload) streams."""
+        self.stage_seconds.observe(seconds, stage=stage)
+        self.events.emit("stage_latency", stage=stage, seconds=seconds)
 
     # ------------------------------------------------------------------ claims
     def accept_claim(
@@ -409,8 +453,19 @@ class EngineCore:
             # fail-closed store: the claim is NOT marked offloaded (its
             # device blocks that did move are simply absent down-tier) and
             # the outcome is counted with trigger attribution — e.g. a
-            # quarantined target tier refuses new offload-dependent work
-            self.fail_closed.increment(job.failure_trigger or TRIGGER_INJECTED)
+            # quarantined target tier refuses new offload-dependent work.
+            # The refusal event is the counter's ordered witness: without it
+            # this increment would be unreconcilable against the log.
+            trigger = job.failure_trigger or TRIGGER_INJECTED
+            self.events.emit(
+                "fail_closed_refused",
+                request_id=request_id,
+                claim_id=claim_id,
+                scope="offload",
+                trigger=trigger,
+                reason=job.failure_reason,
+            )
+            self.fail_closed.increment(trigger)
         self.connector.complete_job(job)
         return job.ok
 
@@ -444,6 +499,7 @@ class EngineCore:
                 request_id=req.request_id,
                 predicate=claim.predicate.name,
             )
+        t0 = time.monotonic()
         job = self.connector.load(
             hit_blocks,
             claim_id=restore_claims[0].claim_id if restore_claims else None,
@@ -470,8 +526,17 @@ class EngineCore:
             else:
                 # unclaimed generic failure: NOT a claim outcome (fail closed);
                 # the request errors without claim-scoped scheduler events.
+                # The generic refusal event keeps the counter reconcilable
+                # without adding any claim-scoped evidence.
                 req.status = "error"
                 req.error = "unclaimed_load_failure"
+                self.events.emit(
+                    "fail_closed_refused",
+                    request_id=req.request_id,
+                    scope="unclaimed_load",
+                    trigger="unclaimed_load_failure",
+                    reason=reason,
+                )
                 self.fail_closed.increment("unclaimed_load_failure")
             self.events.emit(
                 "offload_request_finished_pending_jobs",
@@ -482,6 +547,7 @@ class EngineCore:
                 "request_finished", request_id=req.request_id, status="FINISHED_ERROR"
             )
             return False
+        self._observe_stage("restore", time.monotonic() - t0)
         for claim in restore_claims:
             self.registry.mark(
                 claim,
@@ -489,6 +555,7 @@ class EngineCore:
                 "resident_claim_restored",
                 request_id=req.request_id,
             )
+        self.claim_restores.inc(n=len(restore_claims))
         req.restored_tokens = sum(len(b.tokens) for b in hit_blocks)
         self.connector.complete_job(job)
         return True
@@ -521,7 +588,10 @@ class EngineCore:
                     last_tok[i] = toks[i]
                 else:
                     toks[i] = last_tok[i]
+            t0 = time.monotonic()
             logits, state = step(state, jnp.asarray(toks), jnp.asarray(pos))
+            jax.block_until_ready(logits)
+            self._observe_stage("decode_step", time.monotonic() - t0)
             for i, r in enumerate(reqs):
                 if s + 1 < r.max_new_tokens:
                     pos[i] += 1

@@ -56,6 +56,7 @@ restoration failure — that is the fail-closed semantics).
 from __future__ import annotations
 
 import math
+import time
 from functools import lru_cache
 from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
 
@@ -346,6 +347,7 @@ class ServingEngine(EngineCore):
                 blocking_claim_ids=[],
                 conflict_action="refuse",
                 stage="capacity_pressure",
+                trigger=TRIGGER_CAPACITY,
             )
             self.fail_closed.increment(TRIGGER_CAPACITY)
             self.events.emit(
@@ -376,6 +378,7 @@ class ServingEngine(EngineCore):
                 blocking_claim_ids=[],
                 conflict_action="refuse",
                 stage="cache_shape",
+                trigger="dense_cache_overflow",
             )
             self.fail_closed.increment("dense_cache_overflow")
             self.events.emit(
@@ -562,6 +565,7 @@ class ServingEngine(EngineCore):
         for i in range(B):
             r = reqs[i] if i < len(reqs) else reqs[0]
             tokens[i, : len(r.tokens)] = r.tokens
+        t0 = time.monotonic()
         logits, ck, cv = self._jit_prefill_collect(
             self.params,
             {
@@ -569,6 +573,8 @@ class ServingEngine(EngineCore):
                 "valid_len": jnp.asarray(np.asarray(lens, np.int32)),
             },
         )
+        jax.block_until_ready(logits)
+        self._observe_stage("prefill", time.monotonic() - t0)
         ck = np.asarray(ck)  # [L, B, S, KV, Dh]
         cv = np.asarray(cv)
         stored: List[Tuple[Request, List[KVBlock]]] = []
@@ -663,9 +669,12 @@ class ServingEngine(EngineCore):
             pos = jnp.broadcast_to(
                 jnp.arange(lo, hi, dtype=jnp.int32)[None], (B, C)
             )
+            t0 = time.monotonic()
             ck, cv = self._jit_prefill_chunk(
                 self.params, state, jnp.asarray(tokens[:, lo:hi]), pos
             )
+            jax.block_until_ready(ck)
+            self._observe_stage("prefill_chunk", time.monotonic() - t0)
             ck = np.asarray(ck)  # [L, B, C, KV, Dh] — the chunk, not O(S)
             cv = np.asarray(cv)
             for i in list(alive):
@@ -731,9 +740,12 @@ class ServingEngine(EngineCore):
             b.ref += 1
         try:
             if cached == 0:
+                t0 = time.monotonic()
                 logits, cache = self._jit_prefill(
                     self.params, {"tokens": jnp.asarray([req.tokens], jnp.int32)}
                 )
+                jax.block_until_ready(logits)
+                self._observe_stage("prefill", time.monotonic() - t0)
                 logits = logits[0]
             else:
                 cache, _n = self._dense_cache(dev_blocks)
@@ -802,6 +814,7 @@ class ServingEngine(EngineCore):
             blocking_claim_ids=e.blocking_claim_ids,
             conflict_action="refuse",
             stage="allocation",
+            trigger="allocation_conflict",
         )
         self.events.emit(
             "request_finished",

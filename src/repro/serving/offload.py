@@ -62,6 +62,7 @@ from repro.serving.chaos import (
     TRIGGER_WORKER_DEATH,
 )
 from repro.serving.kv_cache import BlockPool, KVBlock, chain_hash
+from repro.serving.metrics import MetricsRegistry
 from repro.serving.tiers import DiskTier, HostTier, TieredStore
 from repro.serving.transfer_queue import (
     DEFAULT_RETRY_POLICY,
@@ -136,6 +137,7 @@ class OffloadingConnector:
         fault_plan: Optional[FaultPlan] = None,
         retry_policy: Optional[RetryPolicy] = None,
         quarantine_after: Optional[int] = 3,
+        metrics: Optional[MetricsRegistry] = None,
     ):
         from repro.core.events import EventLog
 
@@ -145,7 +147,8 @@ class OffloadingConnector:
         self.tiers = TieredStore(self.host, self.disk)
         self._events = event_log if event_log is not None else EventLog()
         self.injection = injection or FailureInjectionConfig()
-        self.queue = queue or TransferQueue()
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.queue = queue or TransferQueue(metrics=self.metrics)
         self.plan = fault_plan
         for tier in self.tiers.tiers:
             tier.fault_plan = fault_plan  # corruption draws at tier put
@@ -154,6 +157,33 @@ class OffloadingConnector:
         self.retry_histogram: Dict[int, int] = {}  # attempt# -> count
         self._job_ids = itertools.count()
         self.jobs: Dict[int, OffloadJob] = {}
+        # -- telemetry (reconciled against the event log by
+        #    analyzer.check_metrics_reconcile) --------------------------------
+        # transfer_block_seconds observes exactly the E3->E4 pairs: the LAST
+        # E3 for a (block, direction) opens the measurement, the E4 that
+        # follows closes it.  A refusal that never submits (quarantined
+        # tier: E4 with no E3) is deliberately not an observation.
+        self._pending_submit: Dict[Tuple[Optional[int], str], float] = {}
+        self._m_transfer = self.metrics.histogram(
+            "transfer_block_seconds",
+            "Per-block transfer latency, E3 submission to E4 finish",
+            labels=("direction", "ok"),
+        )
+        self._m_retries = self.metrics.counter(
+            "transfer_retries_total",
+            "Transient per-block retries scheduled (one per transfer_retry_scheduled event)",
+            labels=("direction",),
+        )
+        self._m_tier_blocks = self.metrics.gauge(
+            "tier_blocks", "Blocks resident per storage tier", labels=("tier",)
+        )
+        self._m_tier_bytes = self.metrics.gauge(
+            "tier_bytes", "Payload bytes resident per storage tier", labels=("tier",)
+        )
+        self._m_tier_quarantined = self.metrics.gauge(
+            "tier_quarantined", "1 if the tier is quarantined, else 0", labels=("tier",)
+        )
+        self._update_tier_gauges()
 
     # -- lookup ------------------------------------------------------------------
     def lookup(
@@ -272,15 +302,7 @@ class OffloadingConnector:
         survivors = [b for b, r in zip(blocks, results) if r.ok]
         self._batched_copy(survivors, job)
         for blk, res in zip(blocks, results):
-            self._events.emit(
-                "offload_worker_transfer_finished",
-                request_id=job.request_id,
-                claim_id=job.claim_id,
-                block_id=blk.block_id,
-                direction=direction,
-                ok=res.ok,
-                reason=res.reason,
-            )
+            self._emit_transfer_finished(job, blk.block_id, direction, res.ok, res.reason)
             if res.ok:
                 if blk.block_id in self.device.blocks:
                     self.device.remove(blk.block_id, reason="offloaded")
@@ -296,6 +318,42 @@ class OffloadingConnector:
             job_id=job.job_id,
             ok=job.ok,
         )
+
+    # -- telemetry ----------------------------------------------------------------
+    def _emit_transfer_finished(
+        self, job: OffloadJob, block_id, direction: str, ok: bool, reason: str
+    ) -> None:
+        """The ONE E4 emission point: every transfer-finished event also
+        closes its E3->E4 latency observation (when a submission opened one),
+        so the histogram count structurally equals the event-log pair count —
+        the reconciliation invariant, enforced by construction."""
+        ev = self._events.emit(
+            "offload_worker_transfer_finished",
+            request_id=job.request_id,
+            claim_id=job.claim_id,
+            block_id=block_id,
+            direction=direction,
+            ok=ok,
+            reason=reason,
+        )
+        t0 = self._pending_submit.pop((block_id, direction), None)
+        if t0 is not None:
+            self._m_transfer.observe(
+                max(0.0, ev.ts - t0), direction=direction, ok=str(bool(ok)).lower()
+            )
+
+    def _update_tier_gauges(self) -> None:
+        """Refresh occupancy/quarantine gauges after each joined job."""
+        self._m_tier_blocks.set(len(self.device.blocks), tier="device")
+        self._m_tier_bytes.set(
+            sum(b.nbytes for b in self.device.blocks.values()), tier="device"
+        )
+        for tier in self.tiers.tiers:
+            self._m_tier_blocks.set(tier.used, tier=tier.name)
+            self._m_tier_bytes.set(tier.resident_bytes, tier=tier.name)
+            self._m_tier_quarantined.set(
+                1 if self.health.is_quarantined(tier.name) else 0, tier=tier.name
+            )
 
     # -- load (host|disk -> device): restore --------------------------------------
     def load(
@@ -403,15 +461,7 @@ class OffloadingConnector:
                 # tables, with no dense-slab assembly step
                 blk.checksum = None  # verified; device-resident again
                 self.device.readmit(blk)
-                self._events.emit(
-                    "offload_worker_transfer_finished",
-                    request_id=job.request_id,
-                    claim_id=job.claim_id,
-                    block_id=blk.block_id,
-                    direction=direction,
-                    ok=True,
-                    reason="",
-                )
+                self._emit_transfer_finished(job, blk.block_id, direction, True, "")
                 self._events.emit(
                     "block_stored",
                     block_id=blk.block_id,
@@ -436,15 +486,7 @@ class OffloadingConnector:
         The failed bytes never reach the device pool — the KV is absent."""
         job.ok = False
         self._record_job_failure(job, res)
-        self._events.emit(
-            "offload_worker_transfer_finished",
-            request_id=job.request_id,
-            claim_id=job.claim_id,
-            block_id=blk.block_id,
-            direction=direction,
-            ok=False,
-            reason=res.reason,
-        )
+        self._emit_transfer_finished(job, blk.block_id, direction, False, res.reason)
         self._events.emit(
             "offload_worker_load_failed",
             request_id=job.request_id,
@@ -509,6 +551,7 @@ class OffloadingConnector:
             self._job_fault_at_join(
                 job, e.block_id, e.direction, str(e), TRIGGER_TRANSIENT_EXHAUSTED
             )
+        self._update_tier_gauges()
 
     def _job_fault_at_join(
         self, job: OffloadJob, block_id, direction, reason: str, trigger: str
@@ -518,15 +561,7 @@ class OffloadingConnector:
         still strictly before any engine lifecycle event."""
         job.ok = False
         self._record_job_failure(job, TransferResult(False, reason, trigger=trigger))
-        self._events.emit(
-            "offload_worker_transfer_finished",
-            request_id=job.request_id,
-            claim_id=job.claim_id,
-            block_id=block_id,
-            direction=direction or "",
-            ok=False,
-            reason=reason,
-        )
+        self._emit_transfer_finished(job, block_id, direction or "", False, reason)
         if job.kind == "load":
             self._events.emit(
                 "offload_worker_load_failed",
@@ -557,6 +592,7 @@ class OffloadingConnector:
         if att < self.retry_policy.max_attempts:
             job.retries += 1
             self.retry_histogram[att] = self.retry_histogram.get(att, 0) + 1
+            self._m_retries.increment(direction)
             self._events.emit(
                 "transfer_retry_scheduled",
                 request_id=job.request_id,
@@ -586,7 +622,7 @@ class OffloadingConnector:
         attempt: int = 1,
     ) -> TransferResult:
         """Emit the per-block submission event (E3) and decide injection."""
-        self._events.emit(
+        ev = self._events.emit(
             "offload_worker_transfer_submitted",
             request_id=request_id,
             claim_id=claim_id,
@@ -595,6 +631,8 @@ class OffloadingConnector:
             nbytes=blk.nbytes,
             attempt=attempt,
         )
+        # open (or re-open, on a retry) the E3->E4 latency measurement
+        self._pending_submit[(blk.block_id, direction)] = ev.ts
         claim_ids = set(blk.claim_ids) | ({claim_id} if claim_id else set())
         if self.injection.should_fail(direction, claim_ids):
             return TransferResult(
@@ -647,28 +685,16 @@ class OffloadingConnector:
         blocks stay host-resident)."""
         if self.health.is_quarantined("disk"):
             for blk in self.tiers.spill_candidates():
-                self._events.emit(
-                    "offload_worker_transfer_finished",
-                    request_id=job.request_id,
-                    claim_id=job.claim_id,
-                    block_id=blk.block_id,
-                    direction="host_to_disk",
-                    ok=False,
-                    reason="tier_quarantined:disk",
+                self._emit_transfer_finished(
+                    job, blk.block_id, "host_to_disk", False, "tier_quarantined:disk"
                 )
             return
         if attempts is None:
             attempts = {}
         for blk in self.tiers.spill_candidates():
             res = self._attempt_block(blk, "host_to_disk", job, attempts)
-            self._events.emit(
-                "offload_worker_transfer_finished",
-                request_id=job.request_id,
-                claim_id=job.claim_id,
-                block_id=blk.block_id,
-                direction="host_to_disk",
-                ok=res.ok,
-                reason=res.reason,
+            self._emit_transfer_finished(
+                job, blk.block_id, "host_to_disk", res.ok, res.reason
             )
             if not res.ok:
                 continue

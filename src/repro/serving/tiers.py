@@ -56,6 +56,12 @@ class HostTier:
         return len(self.blocks)
 
     @property
+    def resident_bytes(self) -> int:
+        """Occupancy for the tier_bytes gauge (KVBlock.nbytes stays valid
+        even for payload-released blocks — it is recorded at release)."""
+        return sum(b.nbytes for b in self.blocks.values())
+
+    @property
     def over_capacity(self) -> bool:
         return self.capacity is not None and self.used > self.capacity
 
@@ -144,6 +150,10 @@ class DiskTier:
     @property
     def used(self) -> int:
         return len(self.blocks)
+
+    @property
+    def resident_bytes(self) -> int:
+        return sum(b.nbytes for b in self.blocks.values())
 
     @staticmethod
     def _encode(a: np.ndarray):

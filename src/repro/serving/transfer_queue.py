@@ -97,13 +97,28 @@ class TransferQueue:
     # bound their own per-block attempts well below this
     max_total_attempts: int = 256
 
-    def __init__(self) -> None:
+    def __init__(self, metrics=None) -> None:
         self._q: "queue.Queue[Optional[TransferJob]]" = queue.Queue()
         self._worker: Optional[threading.Thread] = None
         self._lock = threading.Lock()
         self.executed_jobs = 0
         self.worker_deaths = 0
         self.retries_performed = 0
+        # optional registry mirror (serving/metrics.MetricsRegistry): the
+        # plain int counters above stay the test/bench surface; these make
+        # the same quantities visible on the exported exposition
+        self._m_jobs = self._m_deaths = self._m_retries = None
+        if metrics is not None:
+            self._m_jobs = metrics.counter(
+                "transfer_jobs_executed_total", "Transfer jobs run by the queue worker"
+            )
+            self._m_deaths = metrics.counter(
+                "transfer_worker_deaths_total", "Transfer worker threads killed mid-job"
+            )
+            self._m_retries = metrics.counter(
+                "transfer_queue_retries_total",
+                "Transient job re-runs performed by the queue (backoff retries)",
+            )
 
     def _ensure_worker(self) -> None:
         with self._lock:
@@ -126,6 +141,8 @@ class TransferQueue:
                     job.error = e  # runaway-retry backstop
                     return None
                 self.retries_performed += 1
+                if self._m_retries is not None:
+                    self._m_retries.inc()
                 time.sleep(job.policy.delay_s(job.attempts))
                 continue  # resumable fn: continues at the faulted block
             except WorkerKilled as e:
@@ -158,10 +175,14 @@ class TransferQueue:
                 return
             kill = self._execute(job)
             self.executed_jobs += 1
+            if self._m_jobs is not None:
+                self._m_jobs.inc()
             job._done.set()
             self._q.task_done()
             if kill is not None:
                 self.worker_deaths += 1
+                if self._m_deaths is not None:
+                    self._m_deaths.inc()
                 self._drain_dead(kill)
                 return  # the thread dies; submit() restarts a fresh one
 

@@ -1,0 +1,208 @@
+"""Metrics registry + event-clock units (no model).
+
+Covers the PR-7 telemetry substrate: labeled counter/gauge/histogram
+families with explicit bucket bounds, Prometheus text exposition, the JSON
+snapshot, the FailClosedCounters-compatible call surface
+(``increment``/``as_dict``/``total``/``get``), the ``Event.ts`` wall-clock
+field (tracing-only — the analyzer orders by ``seq``, never ``ts``), and
+strict ``seq`` monotonicity under concurrent emitters.
+"""
+import json
+import threading
+
+import pytest
+
+from repro.core.events import Event, EventLog
+from repro.serving.metrics import LATENCY_BUCKETS, MetricsRegistry
+
+
+# ---------------------------------------------------------------------------
+# registry semantics
+# ---------------------------------------------------------------------------
+
+
+def test_counter_inc_value_and_total():
+    reg = MetricsRegistry()
+    c = reg.counter("requests_total", "requests", labels=("status",))
+    c.inc(status="ok")
+    c.inc(n=2, status="refused")
+    assert c.value(status="ok") == 1
+    assert c.value(status="refused") == 2
+    assert c.value(status="never") == 0
+    assert c.total() == 3
+
+
+def test_counter_failclosed_compat_surface():
+    """The exact call shapes chaos/engine code used against
+    FailClosedCounters: increment(label_value), get, as_dict, total."""
+    reg = MetricsRegistry()
+    c = reg.counter("fail_closed_total", "fail-closed outcomes", labels=("trigger",))
+    c.increment("permanent_io")
+    c.increment("permanent_io")
+    c.increment("corruption")
+    assert c.get("permanent_io") == 2
+    assert c.get("missing") == 0
+    assert c.as_dict() == {"corruption": 1, "permanent_io": 2}  # sorted
+    assert c.total() == 3
+
+
+def test_unlabeled_counter_and_gauge():
+    reg = MetricsRegistry()
+    c = reg.counter("restores_total", "restores")
+    c.inc()
+    c.inc(n=3)
+    assert c.value() == 4
+    g = reg.gauge("pool_blocks", "blocks", labels=("tier",))
+    g.set(7, tier="host")
+    g.set(2, tier="disk")
+    g.set(5, tier="host")  # gauges overwrite
+    assert g.value(tier="host") == 5
+    assert g.as_dict() == {"disk": 2, "host": 5}
+
+
+def test_get_or_create_and_type_clash():
+    reg = MetricsRegistry()
+    a = reg.counter("x_total", "x", labels=("k",))
+    b = reg.counter("x_total", "x", labels=("k",))
+    assert a is b  # modules attach lazily to the same family
+    with pytest.raises(ValueError):
+        reg.gauge("x_total", "x", labels=("k",))
+    with pytest.raises(ValueError):
+        reg.counter("x_total", "x", labels=("other",))  # label clash
+    assert reg.get("x_total") is a
+    assert reg.get("missing") is None
+
+
+def test_histogram_buckets_counts_and_percentiles():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat_seconds", "latency", labels=("stage",), buckets=(0.1, 1.0))
+    for v in (0.05, 0.5, 0.5, 2.0):
+        h.observe(v, stage="decode")
+    h.observe(0.5, stage="prefill")
+    assert h.count(stage="decode") == 4
+    assert h.count(stage="prefill") == 1
+    assert h.count() == 5  # family-wide when labels omitted
+    assert sorted(h.samples(stage="decode")) == [0.05, 0.5, 0.5, 2.0]
+    p = h.percentiles(qs=(50, 99), stage="decode")
+    assert p["p50"] == 0.5 and p["p99"] == 2.0
+    with pytest.raises(ValueError):
+        reg.histogram("bad_seconds", "x", buckets=(1.0, 0.5))  # not increasing
+
+
+def test_default_latency_buckets_strictly_increasing():
+    assert list(LATENCY_BUCKETS) == sorted(LATENCY_BUCKETS)
+    assert len(set(LATENCY_BUCKETS)) == len(LATENCY_BUCKETS)
+
+
+# ---------------------------------------------------------------------------
+# export surfaces
+# ---------------------------------------------------------------------------
+
+
+def test_prometheus_exposition_format():
+    reg = MetricsRegistry()
+    c = reg.counter("fail_closed_total", "fail-closed outcomes", labels=("trigger",))
+    c.increment("permanent_io")
+    h = reg.histogram("lat_seconds", "latency", buckets=(0.1, 1.0))
+    h.observe(0.05)
+    h.observe(0.5)
+    text = reg.prometheus_text()
+    assert "# HELP fail_closed_total fail-closed outcomes" in text
+    assert "# TYPE fail_closed_total counter" in text
+    assert 'fail_closed_total{trigger="permanent_io"} 1' in text
+    assert "# TYPE lat_seconds histogram" in text
+    # cumulative buckets + the implicit +Inf (bounds render %g: 1.0 -> "1")
+    assert 'lat_seconds_bucket{le="0.1"} 1' in text
+    assert 'lat_seconds_bucket{le="1"} 2' in text
+    assert 'lat_seconds_bucket{le="+Inf"} 2' in text
+    assert "lat_seconds_count 2" in text
+    assert "lat_seconds_sum" in text
+
+
+def test_snapshot_json_round_trip():
+    reg = MetricsRegistry()
+    reg.counter("c_total", "c", labels=("k",)).inc(k="a")
+    reg.gauge("g", "g").set(3.5)
+    h = reg.histogram("h_seconds", "h", buckets=(1.0,))
+    h.observe(0.5)
+    snap = json.loads(reg.to_json())  # serializable end to end
+    assert snap["c_total"]["type"] == "counter"
+    assert snap["c_total"]["series"] == [{"labels": {"k": "a"}, "value": 1}]
+    assert snap["g"]["series"][0]["value"] == 3.5
+    hs = snap["h_seconds"]
+    assert hs["type"] == "histogram" and hs["buckets"] == ["1"]  # %g-formatted
+    (series,) = hs["series"]
+    assert series["count"] == 1 and series["sum"] == 0.5
+    assert series["buckets"] == {"1": 1, "+Inf": 1}  # cumulative
+
+
+def test_counters_thread_safe_under_contention():
+    reg = MetricsRegistry()
+    c = reg.counter("n_total", "n", labels=("t",))
+    h = reg.histogram("d_seconds", "d", buckets=(0.5,))
+    N, T = 500, 8
+
+    def work(i):
+        for _ in range(N):
+            c.increment(f"t{i % 2}")
+            h.observe(0.1)
+
+    threads = [threading.Thread(target=work, args=(i,)) for i in range(T)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert c.total() == N * T
+    assert h.count() == N * T
+
+
+# ---------------------------------------------------------------------------
+# Event.ts + seq monotonicity (the two-clock contract)
+# ---------------------------------------------------------------------------
+
+
+def test_event_ts_stamped_and_json_round_trip():
+    log = EventLog()
+    a = log.emit("request_initialized", request_id="r1")
+    b = log.emit("request_finished", request_id="r1", status="FINISHED_OK", ts=123.5)
+    assert a.ts > 0  # stamped from the monotonic clock
+    assert b.ts == 123.5  # explicit override honored
+    dicts = [e.to_dict() for e in log.events]
+    assert dicts[0]["ts"] == a.ts
+    restored = EventLog.from_dicts(dicts)
+    assert [e.ts for e in restored.events] == [a.ts, b.ts]
+    assert [e.seq for e in restored.events] == [a.seq, b.seq]
+    json.dumps(dicts)  # ts survives serialization
+
+
+def test_ts_not_in_payload():
+    """``ts`` is a dataclass field, NOT payload: per-request ``(name,
+    payload)`` projections (the blast-radius byte-identity surface) must not
+    see wall-clock noise."""
+    log = EventLog()
+    e = log.emit("request_initialized", request_id="r1")
+    assert "ts" not in e.payload
+
+
+def test_seq_strictly_monotonic_under_concurrent_emitters():
+    """The analyzer's total order: one log, many threads, ``seq`` strictly
+    monotonic and gap-free.  ``ts`` rides along but is NEVER the order —
+    equal or reordered timestamps across threads are legal."""
+    log = EventLog()
+    N, T = 400, 8
+
+    def emitter(i):
+        for k in range(N):
+            log.emit("stage_latency", stage=f"t{i}", seconds=0.0)
+
+    threads = [threading.Thread(target=emitter, args=(i,)) for i in range(T)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    seqs = [e.seq for e in log.events]
+    assert len(seqs) == N * T
+    assert seqs == sorted(seqs)
+    assert len(set(seqs)) == len(seqs)  # strict: no duplicates
+    assert seqs == list(range(seqs[0], seqs[0] + len(seqs)))  # gap-free
+    assert all(e.ts > 0 for e in log.events)

@@ -1,0 +1,332 @@
+"""Claim-scoped telemetry at the engine level (reduced qwen3).
+
+PR-7 conformance surface: every fault-taxonomy path yields the right span
+taxonomy with refusals attributed to the injected trigger; the metrics
+registry reconciles against the ordered event log (and tampering with
+either side fails the check); tier gauges track occupancy and quarantine;
+the Prometheus exposition's ``fail_closed_total{trigger}`` values are
+identical to ``EngineCore.fail_closed_total()``; and the exported Perfetto
+trace validates while covering refused AND successful claims.
+"""
+import copy
+
+import jax
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.analyzer import check_metrics_reconcile
+from repro.core.claims import ClaimMode
+from repro.models.registry import build_model
+from repro.serving.chaos import (
+    FaultPlan,
+    FaultSpec,
+    TRIGGER_CORRUPTION,
+    TRIGGER_PERMANENT,
+    TRIGGER_QUARANTINE,
+    TRIGGER_TRANSIENT,
+    TRIGGER_WORKER_DEATH,
+)
+from repro.serving.engine import ServingEngine
+from repro.serving.tracing import (
+    build_instants,
+    build_spans,
+    to_perfetto,
+    validate_perfetto,
+)
+
+PREFIX = tuple(range(10, 26))  # 16 tokens = 4 blocks of 4
+
+
+@pytest.fixture(scope="module")
+def kv():
+    cfg = reduced(get_config("qwen3-1.7b"))
+    bundle = build_model(cfg)
+    params = bundle.init_params(jax.random.PRNGKey(0))
+
+    def make(**kw):
+        kw.setdefault("block_size", 4)
+        kw.setdefault("device_blocks", 64)
+        kw.setdefault("cache_len", 64)
+        return ServingEngine(bundle, params, **kw)
+
+    return make
+
+
+def _offloaded_claim(eng, prefix=PREFIX, tier="host"):
+    claim = eng.accept_claim(prefix, ClaimMode.OFFLOADABLE)
+    eng.run(eng.submit(prefix + (30, 31), max_new_tokens=1))
+    assert eng.offload_claim(claim.claim_id, tier=tier)
+    return claim
+
+
+def _spans_by_name(spans):
+    out = {}
+    for s in spans:
+        out.setdefault(s.name, []).append(s)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# span taxonomy per fault class (refusal spans carry the injected trigger)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "trigger",
+    [TRIGGER_PERMANENT, TRIGGER_CORRUPTION, TRIGGER_WORKER_DEATH],
+)
+def test_fault_refusal_span_attributed(kv, trigger):
+    plan = FaultPlan(seed=11)
+    eng = kv(fault_plan=plan, quarantine_after=None)
+    try:
+        claim = eng.accept_claim(PREFIX, ClaimMode.OFFLOADABLE)
+        eng.run(eng.submit(PREFIX + (30, 31), max_new_tokens=1))
+        if trigger == TRIGGER_CORRUPTION:
+            # corrupt at rest when the bytes land in the tier
+            plan.schedule(FaultSpec(trigger, boundary="host", claim_id=claim.claim_id))
+        assert eng.offload_claim(claim.claim_id, tier="host")
+        if trigger != TRIGGER_CORRUPTION:
+            plan.schedule(
+                FaultSpec(trigger, boundary="host_to_device", claim_id=claim.claim_id)
+            )
+        r = eng.run(eng.submit(PREFIX + (40, 41), max_new_tokens=1))
+        assert r.status == "refused"
+
+        by = _spans_by_name(build_spans(eng.events))
+        (refusal,) = by["refusal"]
+        assert refusal.args["trigger"] == trigger
+        assert refusal.args["via"] == "scheduler_active_request_refused"
+        assert refusal.args["blocking_claim_ids"] == [claim.claim_id]
+        # the refused request's span terminates with FINISHED_ERROR
+        statuses = {s.args["status"] for s in by["request"]}
+        assert statuses == {"FINISHED_OK", "FINISHED_ERROR"}
+        # the failed restore is a span too (ok=False, same trigger)
+        restores = [s for s in by["restore"] if not s.args["ok"]]
+        assert restores and restores[0].args["trigger"] == trigger
+        # every span is seq-ordered and non-negative in duration
+        assert all(s.end_seq >= s.start_seq and s.duration_s >= 0 for s in build_spans(eng.events))
+        assert check_metrics_reconcile(eng.events, eng.metrics).passed
+    finally:
+        eng.close()
+
+
+def test_transient_fault_spans_show_retries_not_refusals(kv):
+    plan = FaultPlan(seed=12)
+    eng = kv(fault_plan=plan, quarantine_after=None)
+    try:
+        claim = _offloaded_claim(eng)
+        plan.schedule(
+            FaultSpec(
+                TRIGGER_TRANSIENT,
+                boundary="host_to_device",
+                claim_id=claim.claim_id,
+                repeats=2,
+            )
+        )
+        r = eng.run(eng.submit(PREFIX + (40, 41), max_new_tokens=1))
+        assert r.status == "finished"  # bounded retry recovered
+
+        by = _spans_by_name(build_spans(eng.events))
+        assert "refusal" not in by  # no counter movement, no refusal span
+        assert all(s.args["status"] == "FINISHED_OK" for s in by["request"])
+        # retries are visible as instants on the transfer track
+        retries = [i for i in build_instants(eng.events) if i.name == "transfer_retry"]
+        assert len(retries) == 2
+        assert {i.args["attempt"] for i in retries} == {1, 2}
+        # the successful restore span exists
+        assert any(s.args["ok"] for s in by["restore"])
+        assert eng.fail_closed_total() == {}
+        assert check_metrics_reconcile(eng.events, eng.metrics).passed
+    finally:
+        eng.close()
+
+
+def test_quarantine_spans_instants_and_gauge(kv):
+    plan = FaultPlan(seed=13)
+    eng = kv(fault_plan=plan, quarantine_after=2, device_blocks=128)
+    try:
+        claims = []
+        for i in range(3):
+            prefix = tuple(range(1000 + 100 * i, 1000 + 100 * i + 16))
+            c = eng.accept_claim(prefix, ClaimMode.OFFLOADABLE)
+            eng.run(eng.submit(prefix + (90 + i,), max_new_tokens=1))
+            assert eng.offload_claim(c.claim_id, tier="disk")
+            claims.append((c, prefix))
+        for c, prefix in claims[:2]:
+            plan.schedule(
+                FaultSpec(TRIGGER_PERMANENT, boundary="disk_to_device", claim_id=c.claim_id)
+            )
+            r = eng.run(eng.submit(prefix + (1, 2), max_new_tokens=1))
+            assert r.status == "refused"
+        # third disk claim: refused on the quarantined tier without disk I/O
+        c3, p3 = claims[2]
+        r3 = eng.run(eng.submit(p3 + (3, 4), max_new_tokens=1))
+        assert r3.status == "refused"
+
+        inst = [i for i in build_instants(eng.events) if i.cat == "quarantine"]
+        assert len(inst) == 1 and inst[0].args["tier"] == "disk"
+        by = _spans_by_name(build_spans(eng.events))
+        triggers = [s.args["trigger"] for s in by["refusal"]]
+        assert triggers.count(TRIGGER_PERMANENT) == 2
+        assert triggers.count(TRIGGER_QUARANTINE) == 1
+        # the quarantine refusal is ordered after the quarantine instant
+        q_refusal = next(s for s in by["refusal"] if s.args["trigger"] == TRIGGER_QUARANTINE)
+        assert q_refusal.start_seq > inst[0].seq
+        # gauge view agrees with the event boundary
+        assert eng.metrics.get("tier_quarantined").value(tier="disk") == 1
+        assert eng.metrics.get("tier_quarantined").value(tier="host") == 0
+        assert check_metrics_reconcile(eng.events, eng.metrics).passed
+    finally:
+        eng.close()
+
+
+# ---------------------------------------------------------------------------
+# registry <-> engine agreement (satellite a: the FailClosedCounters migration)
+# ---------------------------------------------------------------------------
+
+
+def test_counter_vs_plan_exact_through_registry(kv):
+    """bench_chaos's exact counter-vs-plan equality, as a regression unit:
+    scheduled faults -> fail_closed_total() equals the expected dict EXACTLY
+    (same shape FailClosedCounters.as_dict() returned before the registry)."""
+    plan = FaultPlan(seed=14)
+    eng = kv(fault_plan=plan, quarantine_after=None, device_blocks=128)
+    try:
+        expected = {}
+        for i, trigger in enumerate((TRIGGER_PERMANENT, TRIGGER_PERMANENT, TRIGGER_WORKER_DEATH)):
+            prefix = tuple(range(2000 + 100 * i, 2000 + 100 * i + 16))
+            c = eng.accept_claim(prefix, ClaimMode.OFFLOADABLE)
+            eng.run(eng.submit(prefix + (90 + i,), max_new_tokens=1))
+            assert eng.offload_claim(c.claim_id, tier="host")
+            plan.schedule(
+                FaultSpec(trigger, boundary="host_to_device", claim_id=c.claim_id)
+            )
+            r = eng.run(eng.submit(prefix + (1, 2), max_new_tokens=1))
+            assert r.status == "refused"
+            expected[trigger] = expected.get(trigger, 0) + 1
+        assert eng.fail_closed_total() == dict(sorted(expected.items()))
+        # the view IS the registry family — one counting path
+        fam = eng.metrics.get("fail_closed_total")
+        assert fam is eng.fail_closed
+        assert fam.as_dict() == eng.fail_closed_total()
+        # injected-fault mirror matches the plan stats
+        assert eng.metrics.get("chaos_faults_injected_total").as_dict() == dict(
+            sorted(plan.stats.injected.items())
+        )
+        assert check_metrics_reconcile(eng.events, eng.metrics).passed
+    finally:
+        eng.close()
+
+
+def test_prometheus_exposition_matches_fail_closed_view(kv):
+    plan = FaultPlan(seed=15)
+    eng = kv(fault_plan=plan, quarantine_after=None)
+    try:
+        claim = _offloaded_claim(eng)
+        plan.schedule(
+            FaultSpec(TRIGGER_PERMANENT, boundary="host_to_device", claim_id=claim.claim_id)
+        )
+        r = eng.run(eng.submit(PREFIX + (40, 41), max_new_tokens=1))
+        assert r.status == "refused"
+        text = eng.metrics.prometheus_text()
+        exposed = {}
+        for line in text.splitlines():
+            if line.startswith("fail_closed_total{"):
+                labels, value = line.rsplit(" ", 1)
+                trig = labels.split('trigger="', 1)[1].split('"', 1)[0]
+                exposed[trig] = int(value)
+        assert exposed == eng.fail_closed_total() == {TRIGGER_PERMANENT: 1}
+    finally:
+        eng.close()
+
+
+# ---------------------------------------------------------------------------
+# reconciliation: tampering with either side fails the check
+# ---------------------------------------------------------------------------
+
+
+def test_reconcile_rejects_drift_both_ways(kv):
+    plan = FaultPlan(seed=16)
+    eng = kv(fault_plan=plan, quarantine_after=None)
+    try:
+        claim = _offloaded_claim(eng)
+        plan.schedule(
+            FaultSpec(TRIGGER_PERMANENT, boundary="host_to_device", claim_id=claim.claim_id)
+        )
+        eng.run(eng.submit(PREFIX + (40, 41), max_new_tokens=1))
+        assert check_metrics_reconcile(eng.events, eng.metrics).passed
+        snap = eng.metrics.snapshot()
+        assert check_metrics_reconcile(eng.events, snap).passed  # snapshot form too
+
+        # counter increment with no witness event -> fail
+        t1 = copy.deepcopy(snap)
+        t1["fail_closed_total"]["series"].append(
+            {"labels": {"trigger": "corruption"}, "value": 1}
+        )
+        v = check_metrics_reconcile(eng.events, t1)
+        assert not v.passed and "fail_closed_total" in v.reasons[0]
+
+        # dropped histogram observation -> fail
+        t2 = copy.deepcopy(snap)
+        for s in t2["transfer_block_seconds"]["series"]:
+            s["count"] -= 1
+            break
+        assert not check_metrics_reconcile(eng.events, t2).passed
+
+        # restore-count drift -> fail
+        t3 = copy.deepcopy(snap)
+        t3["claim_restores_total"]["series"] = [{"labels": {}, "value": 99}]
+        v3 = check_metrics_reconcile(eng.events, t3)
+        assert not v3.passed and "claim_restores_total" in v3.reasons[0]
+    finally:
+        eng.close()
+
+
+# ---------------------------------------------------------------------------
+# gauges + Perfetto export
+# ---------------------------------------------------------------------------
+
+
+def test_tier_gauges_track_occupancy(kv):
+    eng = kv()
+    try:
+        _offloaded_claim(eng, tier="host")
+        blocks = eng.metrics.get("tier_blocks")
+        bts = eng.metrics.get("tier_bytes")
+        assert blocks.value(tier="host") == 4  # 16 tokens / block_size 4
+        assert bts.value(tier="host") > 0
+        assert blocks.value(tier="disk") == 0
+        # the device gauge mirrors the backing store exactly (the claim's
+        # blocks just moved device -> host, so it may legitimately be 0)
+        assert blocks.value(tier="device") == len(eng.connector.device.blocks)
+        assert check_metrics_reconcile(eng.events, eng.metrics).passed
+    finally:
+        eng.close()
+
+
+def test_perfetto_export_valid_and_covers_both_outcomes(kv):
+    plan = FaultPlan(seed=17)
+    eng = kv(fault_plan=plan, quarantine_after=None)
+    try:
+        claim = _offloaded_claim(eng)
+        plan.schedule(
+            FaultSpec(TRIGGER_PERMANENT, boundary="host_to_device", claim_id=claim.claim_id)
+        )
+        r = eng.run(eng.submit(PREFIX + (40, 41), max_new_tokens=1))
+        assert r.status == "refused"
+        trace = to_perfetto(eng.events)
+        assert validate_perfetto(trace) == []
+        evs = trace["traceEvents"]
+        names = {e["name"] for e in evs}
+        assert {"request", "refusal", "transfer", "offload", "restore"} <= names
+        assert any(e["name"] == "process_name" for e in evs if e["ph"] == "M")
+        # one refused and one successful request on the timeline
+        req_statuses = {
+            e["args"].get("status") for e in evs if e["ph"] == "X" and e["name"] == "request"
+        }
+        assert req_statuses == {"FINISHED_OK", "FINISHED_ERROR"}
+        # stage slices landed on the stages track with positive duration
+        stages = [e for e in evs if e["ph"] == "X" and e["name"].startswith("stage:")]
+        assert stages and all(e["dur"] > 0 for e in stages)
+    finally:
+        eng.close()
