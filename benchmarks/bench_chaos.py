@@ -10,7 +10,10 @@ outcome of every round is computable in advance) and gates on:
   - zero crashes (every round's engine calls return; faults become events);
   - zero order violations: ``validate_event_sequence`` plus the chaos
     conformance checks (``check_fail_closed_attribution``,
-    ``check_retry_bounded``) pass on every engine's full trace;
+    ``check_retry_bounded``, ``check_step_interleave_order``) pass on
+    every engine's full trace — the scheduler's per-request event
+    projection must stay identical to a single-request stream even
+    under injected faults;
   - zero cross-claim contamination: bystander requests batched with faulted
     victims all finish with full output (byte-level identity is covered by
     tests/test_chaos.py's paired-engine comparison);
@@ -52,6 +55,7 @@ from repro.core.analyzer import (
     check_fail_closed_attribution,
     check_metrics_reconcile,
     check_retry_bounded,
+    check_step_interleave_order,
     validate_event_sequence,
 )
 from repro.core.claims import ClaimMode
@@ -82,6 +86,7 @@ def _check_engine_trace(eng, max_attempts: int, violations: list) -> None:
         ("fail_closed_attribution", check_fail_closed_attribution(eng.events)),
         ("retry_bounded", check_retry_bounded(eng.events, max_attempts)),
         ("metrics_reconcile", check_metrics_reconcile(eng.events, eng.metrics)),
+        ("step_interleave_order", check_step_interleave_order(eng.events)),
     ):
         if not verdict.passed:
             violations.append(f"{name}: {verdict.reasons}")
@@ -396,6 +401,7 @@ def main() -> None:
             "zero_cross_claim_contamination": True,
             "exact_counter_attribution": True,
             "metrics_reconcile": True,
+            "zero_interleave_violations": True,
             "min_injected_faults": min_faults,
         },
     }

@@ -315,7 +315,9 @@ def run_prefill_ceiling(out_path: Path = Path("results/BENCH_serving.json")):
     chunked_ok = r_c.status == "finished" and peak_tokens <= budget
 
     # --- logits parity vs the monolithic prefill on the same prompt -------
-    lg_full = mk().prefill_logits(prompt)
+    # (prefill_chunk=0 is the explicit legacy opt-out now that chunked is
+    # the default graph)
+    lg_full = mk(prefill_chunk=0).prefill_logits(prompt)
     lg_chunk = mk(prefill_chunk=chunk).prefill_logits(prompt)
     parity = bool(
         np.allclose(lg_chunk, lg_full, atol=3e-2, rtol=3e-2)

@@ -31,6 +31,13 @@
 #    summary (counters, refusal rates, retry histogram, p50/p95/p99 stage
 #    latencies for prefill/decode/restore/transfer) merges into
 #    results/BENCH_serving.json under "chaos_campaign".
+# 4. Runs the mixed-step scheduler bench (benchmarks/bench_scheduler.py
+#    --fast): ten decode streams measured with and without a concurrent
+#    prefill-admission burst, gating on decode ITL p99 under admission
+#    <= 1.5x isolated (best-of-reps both sides), zero decode-stall steps,
+#    analyzer-clean traces (step interleave order + metric reconciliation)
+#    and every request finishing its full token budget.  Summary merges
+#    into results/BENCH_serving.json under "mixed_scheduler".
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -44,6 +51,9 @@ python benchmarks/bench_multi_claim.py --fast
 
 echo "== chaos campaign: seeded fault plans, exact fail-closed attribution =="
 python benchmarks/bench_chaos.py
+
+echo "== mixed-step scheduler: decode ITL under prefill admission (fast) =="
+python benchmarks/bench_scheduler.py --fast
 
 echo "== BENCH_serving.json =="
 cat results/BENCH_serving.json

@@ -367,6 +367,125 @@ def check_retry_bounded(log: EventLog, max_attempts: int) -> Verdict:
     return Verdict(True, [f"{n_retries} retries bounded below {max_attempts}, all terminal"])
 
 
+def check_step_interleave_order(log: EventLog, require_terminal: bool = True) -> Verdict:
+    """Unified-scheduler interleave conformance: replay the event log and
+    reject any cross-request reordering of the lifecycle grammar.
+
+    The step scheduler (serving/scheduler_loop.py) interleaves many
+    requests' lifecycle events in one totally ordered log; the contract is
+    that each request's PROJECTION is exactly the single-request stream.
+    For every request id, over the grammar-relevant request-scoped events
+    (E0, admission refusals, fail_closed_refused, E12, E13, E14, E10,
+    request_finished):
+
+      * exactly one E0, ordered before every other grammar event;
+      * at most one terminal ``request_finished``, ordered last (a missing
+        terminal fails unless ``require_terminal=False`` — parity probes
+        like prefill_logits leave requests legally un-terminated);
+      * FINISHED_OK  <=> E10 present and NO refusal/error witness
+        (E12/E13/E14/scheduler_admission_refused/fail_closed_refused);
+      * FINISHED_ERROR => no E10, a fail-closed witness (E13 or
+        fail_closed_refused) before E14 before the terminal, and any E13 is
+        preceded by a same-request E12 (restore-failure attribution order);
+      * REFUSED_ADMISSION => a prior ``scheduler_admission_refused`` and
+        neither E10 nor E14.
+
+    Step-level accounting (``step_scheduled``) must be engine-scoped
+    (``request_id=None``): a request-scoped step event would make one
+    request's projection depend on its batch-mates, which is exactly the
+    reordering this check exists to reject.
+    """
+    GRAMMAR = (
+        "request_initialized",
+        "scheduler_admission_refused",
+        "fail_closed_refused",
+        "scheduler_resident_claim_restoration_failed",
+        "scheduler_active_request_refused",
+        "offload_request_finished_pending_jobs",
+        "offload_request_finished_no_pending_jobs",
+        "request_finished",
+    )
+    per_req: dict = {}
+    n_steps = 0
+    for e in log.events:
+        if e.name == "step_scheduled":
+            n_steps += 1
+            if e.request_id is not None:
+                return Verdict.fail(
+                    f"step_scheduled at seq {e.seq} is request-scoped "
+                    f"({e.request_id}); step accounting must be engine-scoped"
+                )
+            continue
+        if e.name in GRAMMAR and e.request_id is not None:
+            per_req.setdefault(e.request_id, []).append(e)
+
+    def _names(proj, name):
+        return [e for e in proj if e.name == name]
+
+    for rid, proj in per_req.items():
+        e0s = _names(proj, "request_initialized")
+        if len(e0s) != 1 or proj[0] is not e0s[0]:
+            return Verdict.fail(f"request {rid}: E0 not unique/first in projection")
+        terms = _names(proj, "request_finished")
+        if len(terms) > 1:
+            return Verdict.fail(f"request {rid}: multiple terminal request_finished")
+        if not terms:
+            if require_terminal:
+                return Verdict.fail(f"request {rid}: no terminal request_finished")
+            continue
+        term = terms[0]
+        if proj[-1] is not term:
+            stray = proj[-1]
+            return Verdict.fail(
+                f"request {rid}: {stray.name} (seq {stray.seq}) ordered after terminal"
+            )
+        status = term.payload.get("status")
+        e10 = _names(proj, "offload_request_finished_no_pending_jobs")
+        e14 = _names(proj, "offload_request_finished_pending_jobs")
+        e13 = _names(proj, "scheduler_active_request_refused")
+        e12 = _names(proj, "scheduler_resident_claim_restoration_failed")
+        adm = _names(proj, "scheduler_admission_refused")
+        fcr = _names(proj, "fail_closed_refused")
+        if status == "FINISHED_OK":
+            if not e10:
+                return Verdict.fail(f"request {rid}: FINISHED_OK without E10")
+            if e12 or e13 or e14 or adm or fcr:
+                return Verdict.fail(
+                    f"request {rid}: FINISHED_OK carries a refusal/error witness"
+                )
+        elif status == "FINISHED_ERROR":
+            if e10:
+                return Verdict.fail(f"request {rid}: FINISHED_ERROR served output (E10)")
+            if not e14:
+                return Verdict.fail(f"request {rid}: FINISHED_ERROR without E14")
+            witnesses = e13 + fcr
+            if not any(w.seq < e14[0].seq for w in witnesses):
+                return Verdict.fail(
+                    f"request {rid}: no fail-closed witness ordered before E14"
+                )
+            if e13 and not (e12 and e12[0].seq < e13[0].seq):
+                return Verdict.fail(
+                    f"request {rid}: E13 without a preceding same-request E12"
+                )
+        elif status == "REFUSED_ADMISSION":
+            if e10 or e14:
+                return Verdict.fail(
+                    f"request {rid}: REFUSED_ADMISSION carries terminal-path events"
+                )
+            if not adm:
+                return Verdict.fail(
+                    f"request {rid}: REFUSED_ADMISSION without scheduler_admission_refused"
+                )
+        else:
+            return Verdict.fail(f"request {rid}: unknown terminal status {status!r}")
+    return Verdict(
+        True,
+        [
+            f"{len(per_req)} request projections conform over {n_steps} scheduler steps"
+        ],
+    )
+
+
 # -- metric <-> event reconciliation ------------------------------------------
 
 # Refusal events whose ``trigger`` payload is the ordered witness for a
@@ -416,7 +535,7 @@ def check_metrics_reconcile(log: EventLog, metrics) -> Verdict:
 
     The metrics registry is a derived view over the SAME run the event log
     witnesses; any drift between the two means the telemetry has invented or
-    dropped an outcome.  Five rules, each checked in both directions:
+    dropped an outcome.  Six rules, each checked in both directions:
 
       1. ``fail_closed_total{trigger}`` equals the tally of ``trigger``
          payloads across the refusal events (E13, admission refusals, and
@@ -435,6 +554,9 @@ def check_metrics_reconcile(log: EventLog, metrics) -> Verdict:
          count of ``transfer_retry_scheduled`` events.
       5. ``stage_seconds{stage}`` observation counts equal the per-stage
          tally of ``stage_latency`` events.
+      6. ``scheduler_step_tokens`` total observation count equals the
+         number of ``step_scheduled`` events (one histogram sample per
+         unified scheduler step, engines without a step loop hold 0 == 0).
 
     ``metrics`` may be a live ``serving.metrics.MetricsRegistry`` or its
     ``snapshot()`` dict (the serialized form the CI artifacts carry).
@@ -515,6 +637,17 @@ def check_metrics_reconcile(log: EventLog, metrics) -> Verdict:
             f"metrics={stage_m} events={stage_ev}"
         )
     reasons.append(f"stage_seconds == stage_latency tally ({sum(stage_ev.values())})")
+
+    # rule 6: scheduler_step_tokens count <-> step_scheduled events (the
+    # unified scheduler's per-step accounting; engines without the step
+    # loop reconcile 0 == 0)
+    n_step_ev = len(log.named("step_scheduled"))
+    n_step_obs = sum(_histogram_counts(snap, "scheduler_step_tokens").values())
+    if n_step_obs != n_step_ev:
+        return Verdict.fail(
+            f"scheduler_step_tokens count {n_step_obs} != step_scheduled count {n_step_ev}"
+        )
+    reasons.append(f"scheduler_step_tokens count == step_scheduled events ({n_step_ev})")
 
     return Verdict(True, reasons)
 

@@ -77,8 +77,15 @@ NATIVE_EVENTS = (
     "transfer_batch_executed",
     "offload_tier_spill",
     "offload_tier_promote",
-    # continuous batching (serving/engine.py)
+    # continuous batching (serving/engine.py): batch_scheduled marks one
+    # run_batch submission (ANY batch size, including 1 — span tracing and
+    # metrics reconciliation never special-case singletons); step_scheduled
+    # marks one unified scheduler step (engine-scoped, request_id=None so
+    # per-request projections stay byte-identical across batch compositions)
+    # carrying the step's token accounting: decode/feed rows + at most one
+    # in-flight prefill chunk under the max_tokens_per_step budget
     "batch_scheduled",
+    "step_scheduled",
     # fault handling (serving/chaos.py, serving/offload.py): a bounded
     # transient retry is visible in the trace, and tier quarantine is an
     # explicit boundary event ordered before any quarantine-attributed refusal

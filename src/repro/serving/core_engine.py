@@ -70,6 +70,9 @@ class Request:
     error: str = ""
     cached_tokens: int = 0
     restored_tokens: int = 0
+    # monotonic wall-clock when the FIRST output token was appended (TTFT
+    # measurement surface for the step scheduler and bench_scheduler)
+    first_token_ts: Optional[float] = None
 
 
 @dataclass
@@ -560,6 +563,32 @@ class EngineCore:
         self.connector.complete_job(job)
         return True
 
+    def _fail_closed_error(
+        self, req: Request, *, scope: str, trigger: str, reason: str
+    ) -> None:
+        """Convert a launch/store failure into the ordered fail-closed
+        terminal outcome for ONE request: witness refusal with trigger
+        attribution -> E14 -> request_finished FINISHED_ERROR.  This is the
+        step-loop/decode hardening boundary shared by every engine kind —
+        an execution exception never strands a request in a non-terminal
+        status (and never escapes run_batch/serve_batch)."""
+        req.status = "error"
+        req.error = f"{trigger}: {reason}"
+        self.events.emit(
+            "fail_closed_refused",
+            request_id=req.request_id,
+            scope=scope,
+            trigger=trigger,
+            reason=reason,
+        )
+        self.fail_closed.increment(trigger)
+        self.events.emit(
+            "offload_request_finished_pending_jobs", request_id=req.request_id
+        )
+        self.events.emit(
+            "request_finished", request_id=req.request_id, status="FINISHED_ERROR"
+        )
+
     # ------------------------------------------------------------ shared decode
     def _greedy_decode_loop(self, reqs, state, logits, pos, step):
         """Ragged continuous-batched greedy decode, shared by every engine
@@ -585,6 +614,8 @@ class EngineCore:
             for i, r in enumerate(reqs):
                 if s < r.max_new_tokens:
                     r.output_tokens.append(int(toks[i]))
+                    if r.first_token_ts is None:
+                        r.first_token_ts = time.monotonic()
                     last_tok[i] = toks[i]
                 else:
                     toks[i] = last_tok[i]

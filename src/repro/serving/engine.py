@@ -42,11 +42,21 @@ prefill launch.  Chains stay PINNED across chunks (mid-prefill allocations
 cannot evict a live chain) and a mid-prefill store failure fails closed
 with allocation attribution, exactly like the monolithic path.
 
-**Continuous batching.**  ``run_batch`` admits any number of requests under
-claim-scoped admission, runs restore/prefill through the shared fail-closed
-boundary, then decodes every in-flight request with ONE jitted step per
-token position (the ragged greedy loop lives in EngineCore, shared with the
-snapshot engine).  ``run(req)`` is ``run_batch([req])``.
+**Continuous batching (unified step scheduler).**  ``run_batch`` (paged
+mode) drives the token-budget step loop in ``scheduler_loop.StepLoop``:
+every scheduler step carries ALL live decode/feed rows in one mixed launch
+plus at most one in-flight prefill chunk under ``max_tokens_per_step``,
+waiting requests are admitted/restored between steps, and a request that
+completes mid-stream frees its pages immediately.  Decode rows launch
+every step — admission bursts never stall in-flight decodes behind a full
+prefill.  ``run(req)`` is ``run_batch([req])``; dense mode keeps the
+phased prefill-then-decode path (parity/bench anchor).
+
+``prefill_chunk`` is ON BY DEFAULT (``DEFAULT_PREFILL_CHUNK``): the chunk
+graph is chunk-size-invariant (bitwise — every chunk size stores the same
+page bytes and yields the same entry logits), so chunked-vs-full and
+restored-vs-cold parity is structural.  Pass ``prefill_chunk=0`` for the
+legacy monolithic O(S) collect launch (the ceiling-benchmark anchor).
 
 The engine runs a REAL JAX model: cached/restored page payloads are the
 bytes decode attends over, so a failed restore genuinely leaves the request
@@ -84,14 +94,33 @@ from repro.serving.kv_cache import (
     unpin_chain,
 )
 from repro.serving.offload import FailureInjectionConfig, OffloadingConnector
+from repro.serving.scheduler_loop import (
+    BATCH_PAD,
+    DEFAULT_MAX_TOKENS_PER_STEP,
+    PrefillJob,
+    StepLoop,
+    _round_up,
+)
 
 __all__ = [
+    "BATCH_PAD",
+    "DEFAULT_MAX_TOKENS_PER_STEP",
+    "DEFAULT_PREFILL_CHUNK",
     "Request",
     "Scheduler",
     "SchedulerOutcome",
     "ServingEngine",
     "_jitted_steps",
+    "_round_up",
 ]
+
+# Chunked prefill default (tokens per chunk): O(chunk) peak prefill KV and
+# decode-interleavable prefill launches.  Structural parity makes the flip
+# safe: the chunk graph stores bitwise-identical page bytes for EVERY chunk
+# size (including one chunk covering the whole prompt), so defaulting it on
+# moves no logits surface.  Explicit prefill_chunk=0 restores the monolithic
+# O(S) collect launch.
+DEFAULT_PREFILL_CHUNK = 32
 
 
 @lru_cache(maxsize=16)
@@ -105,20 +134,6 @@ def _jitted_paged_steps(bundle):
         jax.jit(bundle.paged_decode_fn),
         jax.jit(bundle.prefill_chunk_fn),
     )
-
-
-def _round_up(n: int, m: int) -> int:
-    """Round n up to a multiple of m (minimum m) — bounds jit recompiles
-    across batches by bucketing block-table / tail shapes."""
-    return max(m, ((n + m - 1) // m) * m)
-
-
-# Batch-width bucket: every prefill launch and decode batch is padded to a
-# multiple of this, so sequential (B=1) and batched execution run through
-# the SAME compiled executables.  XLA CPU executables can round differently
-# per compilation; sharing one executable makes batched-vs-sequential token
-# parity structural instead of a numerical accident.
-BATCH_PAD = 4
 
 
 class ServingEngine(EngineCore):
@@ -140,7 +155,8 @@ class ServingEngine(EngineCore):
         host_blocks: Optional[int] = None,
         disk_dir=None,
         decode_mode: str = "paged",
-        prefill_chunk: int = 0,
+        prefill_chunk: Optional[int] = None,
+        max_tokens_per_step: int = DEFAULT_MAX_TOKENS_PER_STEP,
         fault_plan=None,
         retry_policy=None,
         quarantine_after: Optional[int] = 3,
@@ -170,14 +186,36 @@ class ServingEngine(EngineCore):
                 self._jit_paged_decode,
                 self._jit_prefill_chunk,
             ) = paged
-        # prefill_chunk > 0 bounds peak prefill KV at O(chunk): prompts whose
-        # bucket exceeds the chunk run chunk-by-chunk, each completed chunk's
-        # blocks landing in pool pages before the next chunk launches.
-        # 0 keeps the single full-length collect launch.
+        # prefill_chunk bounds peak prefill KV at O(chunk): every fresh
+        # bucket runs chunk-by-chunk, each completed chunk's blocks landing
+        # in pool pages before the next chunk launches.  None -> the
+        # default (chunked ON); explicit 0 -> the legacy single full-length
+        # collect launch.
+        if prefill_chunk is None:
+            prefill_chunk = DEFAULT_PREFILL_CHUNK
         self.prefill_chunk = (
             _round_up(prefill_chunk, block_size) if prefill_chunk else 0
         )
+        # unified step-scheduler budget: live rows (1 token each) + at most
+        # one prefill chunk (chunk_len x bucket rows) per step
+        self.max_tokens_per_step = max_tokens_per_step
         self._pages_mirror: Optional[Tuple[int, Any, Any]] = None
+        # step-scheduler observability (registered unconditionally so the
+        # reconcile rule step_tokens.count == |step_scheduled| holds 0==0
+        # for dense/idle engines too)
+        self.step_tokens = self.metrics.histogram(
+            "scheduler_step_tokens",
+            "tokens carried per unified scheduler step (decode+feed rows + prefill chunk)",
+            buckets=(1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024),
+        )
+        self.step_occupancy = self.metrics.gauge(
+            "scheduler_step_occupancy",
+            "last step's token load as a fraction of max_tokens_per_step",
+        )
+        self.decode_stalls = self.metrics.counter(
+            "decode_stall_steps_total",
+            "scheduler steps where live decode rows did NOT launch (must stay 0)",
+        )
 
     # ------------------------------------------------------------------ claims
     def _claims_covering_block(self, chain: str, block_index: int) -> Set[str]:
@@ -223,8 +261,15 @@ class ServingEngine(EngineCore):
 
     def _device_pages(self) -> Tuple[Any, Any]:
         """jnp mirror of the pool page store, rebuilt only when pages change
-        (version-keyed).  On the TPU target the page store IS device memory
-        and this is the identity."""
+        (version-keyed).  Page frees alone never re-upload: no block table
+        references a freed slot, so stale mirror bytes there are
+        unreachable and the existing device arrays are simply re-keyed
+        (mid-stream completions between steps would otherwise force a full
+        upload onto the next step's critical path).  A scatter-update of
+        just the dirty slots is NOT profitable here: without buffer
+        donation ``.at[].set`` copies the whole mirror, and donation is
+        unsound because live decode states alias these arrays.  On the TPU
+        target the page store IS device memory and this is the identity."""
         pool = self.pool
         ver = pool._pages_version if pool.k_pages is not None else -1
         if self._pages_mirror is None or self._pages_mirror[0] != ver:
@@ -236,11 +281,20 @@ class ServingEngine(EngineCore):
                 )
                 self._pages_mirror = (ver, z, z)
             else:
-                self._pages_mirror = (
-                    ver,
-                    jnp.asarray(pool.k_pages),
-                    jnp.asarray(pool.v_pages),
-                )
+                dirty = pool._dirty_pages
+                km = vm = None
+                if self._pages_mirror is not None:
+                    _, km, vm = self._pages_mirror
+                if km is not None and km.shape == pool.k_pages.shape and not dirty:
+                    # frees only: re-key the mirror, bytes are still valid
+                    self._pages_mirror = (ver, km, vm)
+                else:
+                    self._pages_mirror = (
+                        ver,
+                        jnp.asarray(pool.k_pages),
+                        jnp.asarray(pool.v_pages),
+                    )
+                dirty.clear()
         return self._pages_mirror[1], self._pages_mirror[2]
 
     def _store_prefix_blocks(
@@ -552,15 +606,18 @@ class ServingEngine(EngineCore):
         """ONE shared prefill launch for a bucket of fresh prompts: padded to
         the bucket length, masked by per-row valid lengths.
 
-        When ``prefill_chunk`` is set and the bucket is longer than one
-        chunk, the bucket runs through the chunked path instead — same
-        bucket sharing, O(chunk) peak prefill KV."""
+        When ``prefill_chunk`` is set (the default) EVERY bucket runs
+        through the chunked path — the chunk graph is chunk-size-invariant
+        (one chunk covering the whole prompt is the same computation), so
+        there is exactly ONE default prefill graph and chunked-vs-full
+        parity is structural.  Explicit ``prefill_chunk=0`` keeps this
+        monolithic O(S) collect launch (the ceiling-benchmark anchor)."""
         B = _round_up(len(reqs), BATCH_PAD)  # padding rows replicate row 0
         lens = [len(r.tokens) for r in reqs]
         lens += [lens[0]] * (B - len(reqs))
-        S = _round_up(max(lens), self.block_size)
-        if self.prefill_chunk and S > self.prefill_chunk:
+        if self.prefill_chunk:
             return self._prefill_bucket_chunked(reqs, lens, B)
+        S = _round_up(max(lens), self.block_size)
         tokens = np.zeros((B, S), np.int32)
         for i in range(B):
             r = reqs[i] if i < len(reqs) else reqs[0]
@@ -634,78 +691,66 @@ class ServingEngine(EngineCore):
           the decode entry (tail + logits) comes from the SAME paged feed
           executable as continuations (parity stays structural).
         """
+        # The per-chunk mechanics (carried block tables, per-chunk stores,
+        # pinning, PoolExhausted refusal, launch-failure abort) live in
+        # scheduler_loop.PrefillJob — the SAME object the unified step loop
+        # advances one chunk per step.  Here (prefill_logits / entry-based
+        # callers) the job runs to completion synchronously.
         bs = self.block_size
-        C = self.prefill_chunk
-        # chunk-align the bucket so every launch sees [B, C] tokens (bounds
-        # recompiles); right-padding stays causally masked and unstored
-        S = _round_up(_round_up(max(lens), bs), C)
-        tokens = np.zeros((B, S), np.int32)
-        for i in range(B):
-            r = reqs[i] if i < len(reqs) else reqs[0]
-            tokens[i, : len(r.tokens)] = r.tokens
-        chains: List[List[KVBlock]] = [[] for _ in reqs]
-        alive = list(range(len(reqs)))
-        # ONE block-table width for the whole bucket: columns beyond the
-        # current prefix are masked by prefix_len, so every chunk shares a
-        # single compiled executable instead of recompiling as P grows
-        P = _round_up(S // bs, 4)
-        for lo in range(0, S, C):
-            if not alive:
-                break
-            hi = lo + C
-            jk, jv = self._device_pages()
-            bt = np.zeros((B, P), np.int32)
-            for i in range(B):
-                # padding rows replicate row 0; refused rows keep their
-                # (empty) chain — their outputs are never stored anyway
-                pt = self.pool.page_table(chains[i] if i < len(reqs) else chains[0])
-                bt[i, : len(pt)] = pt
-            state = {
-                "k_pages": jk,
-                "v_pages": jv,
-                "block_tables": jnp.asarray(bt),
-                "prefix_len": jnp.full((B,), lo, jnp.int32),
-            }
-            pos = jnp.broadcast_to(
-                jnp.arange(lo, hi, dtype=jnp.int32)[None], (B, C)
-            )
-            t0 = time.monotonic()
-            ck, cv = self._jit_prefill_chunk(
-                self.params, state, jnp.asarray(tokens[:, lo:hi]), pos
-            )
-            jax.block_until_ready(ck)
-            self._observe_stage("prefill_chunk", time.monotonic() - t0)
-            ck = np.asarray(ck)  # [L, B, C, KV, Dh] — the chunk, not O(S)
-            cv = np.asarray(cv)
-            for i in list(alive):
-                req = reqs[i]
-                upto = min(hi, lens[i] - lens[i] % bs)
-                if upto <= lo:
-                    continue
-                try:
-                    chains[i].extend(
-                        self._store_prefix_blocks(
-                            req, ck[:, i], cv[:, i], upto, start=lo
-                        )
-                    )
-                except PoolExhausted as e:
-                    # fail closed mid-prefill: unwind THIS row's pinned
-                    # chain; its already-shared pages stay owned by the
-                    # bucket mates that also pinned them
-                    unpin_chain(chains[i])
-                    chains[i] = []
-                    self._refuse_allocation(req, e)
-                    alive.remove(i)
+        job = PrefillJob(self, reqs)
+        while not job.done:
+            job.advance()
         entries = []
+        alive = list(job.alive)
         pages = self._device_pages() if alive else None
         for i in alive:
             req = reqs[i]
             self._materialize_claims(req, lens[i] - lens[i] % bs)
             try:
-                entries.append(self._continue_paged(req, chains[i], pages))
+                entries.append(self._continue_paged(req, job.chains[i], pages))
             finally:
-                unpin_chain(chains[i])  # the entry holds its own pins
+                unpin_chain(job.chains[i])  # the entry holds its own pins
         return entries
+
+    def _prefill_collect_store(
+        self, reqs: List[Request]
+    ) -> List[Tuple[Request, List[KVBlock], int]]:
+        """Step-loop entry for the legacy monolithic collect graph
+        (``prefill_chunk=0``): ONE padded+masked [B, S] launch, stores, and
+        returns (req, pinned_chain, cached_tokens) triples — the step loop
+        feeds/materializes them through the same mixed launches as chunked
+        rows.  PoolExhausted refuses per-row; other launch exceptions
+        propagate for the caller's fail-closed boundary."""
+        B = _round_up(len(reqs), BATCH_PAD)
+        lens = [len(r.tokens) for r in reqs]
+        lens += [lens[0]] * (B - len(reqs))
+        S = _round_up(max(lens), self.block_size)
+        tokens = np.zeros((B, S), np.int32)
+        for i in range(B):
+            r = reqs[i] if i < len(reqs) else reqs[0]
+            tokens[i, : len(r.tokens)] = r.tokens
+        t0 = time.monotonic()
+        logits, ck, cv = self._jit_prefill_collect(
+            self.params,
+            {
+                "tokens": jnp.asarray(tokens),
+                "valid_len": jnp.asarray(np.asarray(lens, np.int32)),
+            },
+        )
+        jax.block_until_ready(logits)
+        self._observe_stage("prefill", time.monotonic() - t0)
+        ck = np.asarray(ck)
+        cv = np.asarray(cv)
+        stored: List[Tuple[Request, List[KVBlock], int]] = []
+        for i, req in enumerate(reqs):
+            n = lens[i]
+            try:
+                blocks = self._store_prefix_blocks(req, ck[:, i], cv[:, i], n)
+            except PoolExhausted as e:
+                self._refuse_allocation(req, e)
+                continue
+            stored.append((req, blocks, n - n % self.block_size))
+        return stored
 
     def _decode_paged(self, entries: List[Dict[str, Any]]) -> None:
         """Paged continuous-batched greedy decode: every step attends each
@@ -849,77 +894,60 @@ class ServingEngine(EngineCore):
         return np.asarray(entry["logits"], np.float32)
 
     def run_batch(self, reqs: Sequence[Request]) -> List[Request]:
-        """Continuous batching: admit, restore and prefill each request under
-        the shared claim lifecycle, then decode all survivors together.
+        """Continuous batching through the unified token-budget step loop
+        (scheduler_loop.StepLoop): requests enter the waiting queue in
+        submission order and are admitted FIFO; every scheduler step
+        carries all live decode/feed rows plus at most one prefill chunk
+        under ``max_tokens_per_step``; completion mid-stream frees pages
+        immediately.
 
         Per-request event ordering (E0 .. terminal) is exactly the
-        single-request stream; claim-scoped admission refusals and
+        single-request stream (check_step_interleave_order enforces the
+        grammar over any interleaving); claim-scoped admission refusals and
         fail-closed restoration outcomes drop a request from the batch
         without affecting the others (PoolExhausted attribution and
-        blocking_claim_ids are per-request, as in witness path C).
+        blocking_claim_ids are per-request, as in witness path C), and a
+        launch failure terminates its rows through the fail-closed boundary
+        (``_fail_closed_error``) instead of escaping with requests stranded
+        non-terminal.
         """
         reqs = list(reqs)
         # --- expiry boundary sweep precedes scheduling ---
         self.scheduler.sweep_expiry()
-        if len(reqs) > 1:
-            self.events.emit(
-                "batch_scheduled",
-                batch_size=len(reqs),
-                request_ids=[r.request_id for r in reqs],
-            )
+        # uniform for EVERY batch size (including 1): span tracing and
+        # metrics reconciliation never special-case singletons
+        self.events.emit(
+            "batch_scheduled",
+            batch_size=len(reqs),
+            request_ids=[r.request_id for r in reqs],
+        )
+        if self.decode_mode == "paged":
+            StepLoop(self, reqs).run()
+            return reqs
+        # --- dense mode: phased prefill-then-decode (parity/bench anchor) ---
         entries: List[Dict[str, Any]] = []
-        pending_prefill: List[Request] = []
-        pending_continue: List[Tuple[Request, List[KVBlock]]] = []
-        paged = self.decode_mode == "paged"
-        # --- phase 1: admission + restore for every request --------------
         for req in reqs:
             try:
                 dev_blocks = self._admit_and_restore(req)
                 if dev_blocks is None:
                     continue
-                if not paged:
-                    entry = self._prepare_dense(req, dev_blocks)
-                    if entry is not None:
-                        entries.append(entry)
-                elif req.cached_tokens == 0:
-                    pending_prefill.append(req)  # bucketed shared launch below
-                else:
-                    # pin immediately: an earlier batch-mate's store must not
-                    # evict this request's prefix before its turn comes
-                    pin_chain(dev_blocks)
-                    pending_continue.append((req, dev_blocks))
+                entry = self._prepare_dense(req, dev_blocks)
+                if entry is not None:
+                    entries.append(entry)
             except PoolExhausted as e:
                 self._refuse_allocation(req, e)
                 continue
-        # --- phase 2: prefill (continuations feed against ONE pages mirror:
-        # their stores only add pages no current block table references) ---
-        if pending_continue:
-            pages = self._device_pages()
-            for req, dev_blocks in pending_continue:
-                unpin_chain(dev_blocks)  # hand the pin over to _continue_paged's own
-                try:
-                    entries.append(self._continue_paged(req, dev_blocks, pages))
-                except PoolExhausted as e:
-                    self._refuse_allocation(req, e)
-        if pending_prefill:
-            # same-bucket prompts share one padded+masked prefill launch
-            buckets: Dict[int, List[Request]] = {}
-            for req in pending_prefill:
-                buckets.setdefault(
-                    _round_up(len(req.tokens), self.block_size), []
-                ).append(req)
-            for _, bucket in sorted(buckets.items()):
-                entries.extend(self._prefill_bucket(bucket))
-        try:
-            if entries:
-                if paged:
-                    self._decode_paged(entries)
-                else:
-                    self._decode_dense(entries)
-        finally:
-            if paged:
-                for e in entries:
-                    unpin_chain(e["blocks"])
+        if entries:
+            try:
+                self._decode_dense(entries)
+            except Exception as e:  # noqa: BLE001 — launch boundary fails closed
+                reason = f"{type(e).__name__}: {e}"
+                for entry in entries:
+                    self._fail_closed_error(
+                        entry["req"], scope="decode_step",
+                        trigger="decode_launch_failure", reason=reason,
+                    )
+                return reqs
         for entry in entries:
             self._finish_ok(entry["req"])
         return reqs

@@ -144,6 +144,11 @@ class BlockPool:
         self.v_pages: Optional[np.ndarray] = None
         self._free_pages: List[int] = []
         self._pages_version = 0  # bumped on any page write (jnp mirror key)
+        # page slots written since the jnp mirror last synced: lets the
+        # engine scatter-update just these slots instead of re-uploading
+        # the whole pool on every chunked-prefill store (the mirror
+        # consumer drains this set when it syncs)
+        self._dirty_pages: set = set()
 
     # -- page store -----------------------------------------------------------
     @staticmethod
@@ -181,6 +186,7 @@ class BlockPool:
         blk.k = self.k_pages[:, :, pi].transpose(0, 2, 1, 3)
         blk.v = self.v_pages[:, :, pi].transpose(0, 2, 1, 3)
         self._pages_version += 1
+        self._dirty_pages.add(pi)
 
     def _page_out(self, blk: KVBlock) -> None:
         if blk.page_index is not None:

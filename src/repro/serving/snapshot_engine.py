@@ -234,12 +234,13 @@ class SnapshotEngine(EngineCore):
             self._new_request(tuple(int(t) for t in toks), max_new_tokens)
             for toks in token_seqs
         ]
-        if len(reqs) > 1:
-            self.events.emit(
-                "batch_scheduled",
-                batch_size=len(reqs),
-                request_ids=[r.request_id for r in reqs],
-            )
+        # uniform for EVERY batch size (including 1): span tracing and
+        # metrics reconciliation never special-case singletons
+        self.events.emit(
+            "batch_scheduled",
+            batch_size=len(reqs),
+            request_ids=[r.request_id for r in reqs],
+        )
         entries = []
         for req in reqs:
             entry = self._prepare_serve(req)
@@ -260,13 +261,22 @@ class SnapshotEngine(EngineCore):
             state = self._stack_states([e["state"] for e in rows])
             logits = jnp.stack([e["logits"] for e in rows])  # [B_pad, V]
             step = lambda s, t, p: self._jit_decode(self.params, s, t, p)
-            self._greedy_decode_loop(
-                [e["req"] for e in entries],
-                state,
-                logits,
-                [e["pos"] for e in rows],
-                step,
-            )
+            try:
+                self._greedy_decode_loop(
+                    [e["req"] for e in entries],
+                    state,
+                    logits,
+                    [e["pos"] for e in rows],
+                    step,
+                )
+            except Exception as exc:  # noqa: BLE001 — launch boundary fails closed
+                reason = f"{type(exc).__name__}: {exc}"
+                for e in entries:
+                    self._fail_closed_error(
+                        e["req"], scope="decode_step",
+                        trigger="decode_launch_failure", reason=reason,
+                    )
+                return reqs
         for e in entries:
             self._finish_ok(e["req"])
         return reqs

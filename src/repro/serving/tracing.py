@@ -35,7 +35,9 @@ Span vocabulary (``Span.name`` / ``cat``):
                 prefill_chunk, decode_step, restore)
 
 Instants: ``tier_quarantined`` and ``transfer_retry_scheduled`` render as
-Perfetto instant events on their track.
+Perfetto instant events on their track; ``batch_scheduled`` and the unified
+scheduler's per-step ``step_scheduled`` accounting render on a dedicated
+``scheduler`` track (step, token load, decode/feed/prefill split, budget).
 
 Export format: the Chrome trace-event JSON object form —
 ``{"traceEvents": [...]}`` with ``"X"`` complete events (ts/dur in
@@ -311,6 +313,38 @@ def build_instants(log: EventLog) -> List[Instant]:
                         "direction": e.payload.get("direction"),
                         "attempt": e.payload.get("attempt"),
                         "delay_s": e.payload.get("delay_s"),
+                    },
+                )
+            )
+        elif e.name == "step_scheduled":
+            out.append(
+                Instant(
+                    "step_scheduled",
+                    "scheduler",
+                    "scheduler",
+                    e.ts,
+                    e.seq,
+                    {
+                        "step": e.payload.get("step"),
+                        "step_tokens": e.payload.get("step_tokens"),
+                        "n_decode": e.payload.get("n_decode"),
+                        "n_feed": e.payload.get("n_feed"),
+                        "prefill_tokens": e.payload.get("prefill_tokens"),
+                        "budget": e.payload.get("budget"),
+                    },
+                )
+            )
+        elif e.name == "batch_scheduled":
+            out.append(
+                Instant(
+                    "batch_scheduled",
+                    "scheduler",
+                    "scheduler",
+                    e.ts,
+                    e.seq,
+                    {
+                        "batch_size": e.payload.get("batch_size"),
+                        "request_ids": e.payload.get("request_ids"),
                     },
                 )
             )

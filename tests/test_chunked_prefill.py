@@ -46,9 +46,12 @@ def make_engine(bp, **kw):
 def test_chunked_matches_full_prefill(bp, chunk):
     """Chunked prefill reproduces the monolithic collect-launch logits
     across chunk sizes (chunk attention over pages + causal-within-chunk
-    composes to exact causal attention over the whole prompt)."""
+    composes to exact causal attention over the whole prompt).  The collect
+    graph is the legacy opt-out now (``prefill_chunk=0``); this cross-graph
+    comparison is tolerance-based — structural equality lives within the
+    chunk graph (see the structural-parity tests below)."""
     prompt = tuple(range(300, 340))  # 40 tokens, bs=4 -> 10 blocks
-    lg_full = make_engine(bp).prefill_logits(prompt)
+    lg_full = make_engine(bp, prefill_chunk=0).prefill_logits(prompt)
     lg_chunk = make_engine(bp, prefill_chunk=chunk).prefill_logits(prompt)
     np.testing.assert_allclose(lg_chunk, lg_full, atol=3e-2, rtol=3e-2)
     assert lg_chunk.argmax() == lg_full.argmax()
@@ -58,10 +61,47 @@ def test_chunked_matches_full_prefill_unaligned(bp):
     """A prompt that ends mid-block replays its trailing partial block
     through the paged tail exactly like the monolithic path."""
     prompt = tuple(range(500, 537))  # 37 tokens: 9 full blocks + 1 partial
-    lg_full = make_engine(bp).prefill_logits(prompt)
+    lg_full = make_engine(bp, prefill_chunk=0).prefill_logits(prompt)
     lg_chunk = make_engine(bp, prefill_chunk=16).prefill_logits(prompt)
     np.testing.assert_allclose(lg_chunk, lg_full, atol=3e-2, rtol=3e-2)
     assert lg_chunk.argmax() == lg_full.argmax()
+
+
+# -------------------------------------------------- structural parity
+# The default prefill graph is the chunk graph for EVERY chunk size
+# (including one chunk covering the whole prompt), so parity within it is
+# BITWISE — np.array_equal, no tolerance, no argmax-on-margin lottery.
+# This is the property that makes chunked-by-default safe.
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 64])
+def test_chunk_size_structural_invariance(bp, chunk):
+    """Every chunk size produces bitwise-identical prefill logits to the
+    default (chunk=64 > prompt covers the whole prompt in ONE launch —
+    the chunked path's own 'full prefill')."""
+    prompt = tuple(range(300, 340))  # 40 tokens
+    lg_default = make_engine(bp).prefill_logits(prompt)
+    lg = make_engine(bp, prefill_chunk=chunk).prefill_logits(prompt)
+    assert np.array_equal(lg, lg_default), (
+        f"chunk={chunk} diverges bitwise from the default chunk graph"
+    )
+
+
+def test_restored_vs_cold_structural_parity(bp):
+    """Restored-vs-cold logits equality is structural: a block-aligned
+    prompt served cold and served through offload->restore runs the SAME
+    feed executable over bitwise-identical page bytes."""
+    prompt = tuple(range(600, 640))  # 40 tokens, block-aligned
+    lg_cold = make_engine(bp).prefill_logits(prompt)
+    eng = make_engine(bp)
+    claim = eng.accept_claim(prompt, ClaimMode.OFFLOADABLE)
+    eng.run(eng.submit(prompt, max_new_tokens=1))
+    assert claim.state == ClaimState.MATERIALIZED
+    assert eng.offload_claim(claim.claim_id, tier="disk")
+    lg_restored = eng.prefill_logits(prompt)
+    assert np.array_equal(lg_cold, lg_restored), (
+        "restored continuation diverges bitwise from cold prefill"
+    )
 
 
 # ------------------------------------------- O(chunk) memory / admission
@@ -112,7 +152,8 @@ def test_prompt_beyond_dense_cache_len_admitted_via_pages(bp):
     assert validate_event_sequence(eng.events).passed
     # logits parity with the monolithic collect path on the same prompt
     lg_full = ServingEngine(
-        bundle, params, block_size=4, device_blocks=64, cache_len=32
+        bundle, params, block_size=4, device_blocks=64, cache_len=32,
+        prefill_chunk=0,
     ).prefill_logits(long_prompt)
     lg_chunk = ServingEngine(
         bundle, params, block_size=4, device_blocks=64, cache_len=32,
@@ -254,8 +295,9 @@ def test_chunked_composes_with_bucket_sharing(bp):
     ]
     eng.run_batch(reqs)
     assert all(r.status == "finished" for r in reqs)
-    # bucket 40 -> pad 48 = 3 chunks of 16; bucket 24 -> pad 32 = 2 chunks
-    assert launches == [(4, 16)] * 3 + [(4, 16)] * 2, launches
+    # bucket 40 -> pad 48 = 3 chunks of 16; the singleton bucket 24 launches
+    # unpadded [1, C] (pad 32 = 2 chunks) -- no wasted rows for a lone prompt
+    assert launches == [(4, 16)] * 3 + [(1, 16)] * 2, launches
     # shared-prefix dedup still applies across the bucket
     assert validate_event_sequence(eng.events).passed
 
@@ -275,4 +317,5 @@ def test_chunked_batch_tokens_match_full_path(bp):
         assert all(r.status == "finished" for r in reqs)
         return [r.output_tokens for r in reqs]
 
-    assert run_all(prefill_chunk=16) == run_all()
+    # chunked (any size, incl. the default) == the legacy monolithic path
+    assert run_all(prefill_chunk=16) == run_all() == run_all(prefill_chunk=0)

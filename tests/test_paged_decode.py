@@ -141,16 +141,18 @@ def test_context_beyond_dense_cache_len(bp):
 
 
 def test_batched_prefill_shares_one_launch(bp):
-    """Same-bucket prompts run ONE shared prefill launch (padded+masked)."""
+    """Same-bucket prompts run ONE shared prefill launch (padded+masked).
+    The default prefill graph is the chunk graph (chunked-by-default), so
+    the shared launch is one [B, C] chunk per bucket here."""
     eng = make_engine(bp, device_blocks=256)
     calls = []
-    orig = eng._jit_prefill_collect
+    orig = eng._jit_prefill_chunk
 
-    def spy(params, batch):
-        calls.append(batch["tokens"].shape)
-        return orig(params, batch)
+    def spy(params, state, toks, pos):
+        calls.append(tuple(toks.shape))
+        return orig(params, state, toks, pos)
 
-    eng._jit_prefill_collect = spy
+    eng._jit_prefill_chunk = spy
     # lengths 12, 11, 12 -> one bucket of 12 (padded), lengths 18 -> its own
     reqs = [
         eng.submit(tuple(range(100, 112)), max_new_tokens=2),

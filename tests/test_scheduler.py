@@ -1,0 +1,331 @@
+"""Unified token-budget step scheduler: fairness, determinism, fail-closed
+launch boundaries, and interleave-order conformance.
+
+The scheduler contract (serving/scheduler_loop.py):
+
+  * every step carries ALL live decode/feed rows plus at most one prefill
+    chunk under ``max_tokens_per_step`` — decode rows never stall;
+  * waiting requests admit FIFO between steps; fresh buckets open prefill
+    jobs in submission order even under budget pressure;
+  * mid-stream completion frees pages immediately (a later bucket can
+    evict them);
+  * per-request event projections are byte-identical across batch
+    compositions — admitting a long prefill next to a decoding bystander
+    changes NOTHING about the bystander's stream;
+  * a launch exception terminates its rows through the fail-closed
+    boundary (trigger-attributed FINISHED_ERROR) instead of escaping
+    run_batch with requests stranded non-terminal.
+"""
+import jax
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.analyzer import (
+    check_metrics_reconcile,
+    check_step_interleave_order,
+    validate_event_sequence,
+)
+from repro.core.events import EventLog
+from repro.models.registry import build_model
+from repro.serving.engine import ServingEngine
+
+
+@pytest.fixture(scope="module")
+def bp():
+    cfg = reduced(get_config("qwen3-1.7b"))
+    bundle = build_model(cfg)
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    return bundle, params
+
+
+def make_engine(bp, **kw):
+    bundle, params = bp
+    kw.setdefault("block_size", 4)
+    kw.setdefault("device_blocks", 64)
+    kw.setdefault("cache_len", 64)
+    return ServingEngine(bundle, params, **kw)
+
+
+def _projection(eng, req):
+    """Per-request (name, payload) stream with the request id normalized —
+    the byte-identity surface for bystander isolation."""
+    out = []
+    for e in eng.events.for_request(req.request_id):
+        payload = {
+            k: ("<rid>" if v == req.request_id else v) for k, v in e.payload.items()
+        }
+        out.append((e.name, tuple(sorted(payload.items(), key=lambda kv: kv[0]))))
+    return out
+
+
+# ------------------------------------------------- fail-closed launch path
+
+
+def test_decode_launch_failure_fails_closed_paged(bp):
+    """Satellite regression: a decode-launch exception used to escape
+    run_batch after the finally-unpin and strand requests non-terminal.
+    Now every affected row terminates FINISHED_ERROR with trigger
+    attribution and all pins unwind."""
+    eng = make_engine(bp)
+    r1 = eng.submit(tuple(range(100, 112)), max_new_tokens=2)
+    r2 = eng.submit(tuple(range(200, 212)), max_new_tokens=2)
+
+    def boom(params, state, toks, pos):
+        raise RuntimeError("injected decode launch failure")
+
+    eng._jit_paged_decode = boom
+    out = eng.run_batch([r1, r2])  # must NOT raise
+    assert out == [r1, r2]
+    for r in (r1, r2):
+        assert r.status == "error"
+        assert "decode_launch_failure" in r.error
+        fin = [
+            e for e in eng.events.named("request_finished")
+            if e.request_id == r.request_id
+        ]
+        assert fin and fin[0].payload["status"] == "FINISHED_ERROR"
+        wit = [
+            e for e in eng.events.named("fail_closed_refused")
+            if e.request_id == r.request_id
+        ]
+        assert wit and wit[0].payload["trigger"] == "decode_launch_failure"
+    assert eng.fail_closed.get("decode_launch_failure") == 2
+    assert all(b.ref == 0 for b in eng.pool.blocks.values())
+    assert validate_event_sequence(eng.events).passed
+    v = check_step_interleave_order(eng.events)
+    assert v.passed, v.reasons
+    assert check_metrics_reconcile(eng.events, eng.metrics).passed
+
+
+def test_prefill_launch_failure_fails_closed(bp):
+    """A chunk-launch exception aborts the prefill job fail-closed: every
+    bucket row terminates with prefill attribution, chains unpinned."""
+    eng = make_engine(bp)
+    r = eng.submit(tuple(range(300, 324)), max_new_tokens=2)
+
+    def boom(params, state, toks, pos):
+        raise RuntimeError("injected prefill launch failure")
+
+    eng._jit_prefill_chunk = boom
+    eng.run_batch([r])
+    assert r.status == "error" and "prefill_launch_failure" in r.error
+    fin = [
+        e for e in eng.events.named("request_finished")
+        if e.request_id == r.request_id
+    ]
+    assert fin and fin[0].payload["status"] == "FINISHED_ERROR"
+    assert all(b.ref == 0 for b in eng.pool.blocks.values())
+    assert check_step_interleave_order(eng.events).passed
+
+
+def test_decode_launch_failure_fails_closed_dense(bp):
+    """The dense phased path shares the hardening boundary."""
+    bundle, params = bp
+    eng = ServingEngine(
+        bundle, params, block_size=4, device_blocks=64, cache_len=64,
+        decode_mode="dense",
+    )
+    r = eng.submit(tuple(range(400, 412)), max_new_tokens=2)
+
+    def boom(params_, cache, toks, pos):
+        raise RuntimeError("injected dense decode failure")
+
+    eng._jit_decode = boom
+    eng.run_batch([r])
+    assert r.status == "error" and "decode_launch_failure" in r.error
+    fin = [
+        e for e in eng.events.named("request_finished")
+        if e.request_id == r.request_id
+    ]
+    assert fin and fin[0].payload["status"] == "FINISHED_ERROR"
+    assert check_step_interleave_order(eng.events).passed
+
+
+# -------------------------------------------- uniform step/batch accounting
+
+
+def test_single_request_batch_emits_uniform_events(bp):
+    """Satellite: batch_scheduled (and step_scheduled) fire for EVERY batch
+    size including 1 — tracing and reconciliation never special-case
+    singletons."""
+    eng = make_engine(bp)
+    r = eng.submit(tuple(range(100, 112)), max_new_tokens=2)
+    eng.run(r)
+    assert r.status == "finished"
+    batches = eng.events.named("batch_scheduled")
+    assert len(batches) == 1 and batches[0].payload["batch_size"] == 1
+    steps = eng.events.named("step_scheduled")
+    assert steps, "unified scheduler must account its steps"
+    assert all(e.request_id is None for e in steps)
+    for e in steps:
+        assert e.payload["step_tokens"] == (
+            e.payload["n_rows"] + e.payload["prefill_tokens"]
+        )
+        assert e.payload["step_tokens"] <= e.payload["budget"] or (
+            e.payload["n_rows"] == 0
+        )
+    # rule 6: one histogram sample per step_scheduled event
+    assert check_metrics_reconcile(eng.events, eng.metrics).passed
+    assert check_step_interleave_order(eng.events).passed
+    assert eng.decode_stalls.value() == 0
+
+
+# --------------------------------------------------- fairness / determinism
+
+
+def test_fifo_job_order_under_budget_pressure(bp):
+    """Fresh buckets open prefill jobs in submission (FIFO) order even when
+    the token budget forces chunks to trickle one per step next to a live
+    decode row — first tokens arrive in submission order and the decode
+    row never stalls."""
+    eng = make_engine(bp, device_blocks=128, prefill_chunk=8,
+                      max_tokens_per_step=16)
+    r0 = eng.submit(tuple(range(50, 58)), max_new_tokens=20)  # long decoder
+    r1 = eng.submit(tuple(range(100, 124)), max_new_tokens=1)  # bucket 24
+    r2 = eng.submit(tuple(range(200, 228)), max_new_tokens=1)  # bucket 28
+    r3 = eng.submit(tuple(range(300, 336)), max_new_tokens=1)  # bucket 36
+    eng.run_batch([r0, r1, r2, r3])
+    assert all(r.status == "finished" for r in (r0, r1, r2, r3))
+    assert len(r0.output_tokens) == 20
+    # FIFO: first tokens in submission order despite different prompt sizes
+    assert r1.first_token_ts < r2.first_token_ts < r3.first_token_ts
+    # zero decode stalls: the budget gates prefill chunks, never decode rows
+    assert eng.decode_stalls.value() == 0
+    # every step respected the budget (the only over-budget steps allowed
+    # are lone oversized chunks with no live rows — not the case here)
+    for e in eng.events.named("step_scheduled"):
+        assert e.payload["step_tokens"] <= e.payload["budget"], e.payload
+    assert check_step_interleave_order(eng.events).passed
+
+
+def test_midstream_completion_frees_pages(bp):
+    """A request that completes mid-stream releases its pages immediately:
+    a later bucket's stores can evict them within the SAME run_batch call
+    (the phased path would have held every chain pinned to the end and
+    refused)."""
+    bundle, params = bp
+    eng = ServingEngine(
+        bundle, params, block_size=4, device_blocks=10, cache_len=64,
+        prefill_chunk=8,
+    )
+    r1 = eng.submit(tuple(range(100, 124)), max_new_tokens=1)  # 6 blocks
+    r2 = eng.submit(tuple(range(200, 228)), max_new_tokens=1)  # 7 blocks
+    eng.run_batch([r1, r2])
+    assert r1.status == "finished", r1.error
+    assert r2.status == "finished", r2.error  # needs r1's pages freed mid-run
+    assert all(b.ref == 0 for b in eng.pool.blocks.values())
+    assert check_step_interleave_order(eng.events).passed
+
+
+def test_bystander_projection_byte_identical_under_admission(bp):
+    """Mid-stream admission of a long prefill next to a decoding bystander
+    changes NOTHING about the bystander: event projection byte-identical,
+    output tokens equal (CPU decode maps rows independently)."""
+    bundle, params = bp
+    prompt = tuple(range(100, 112))
+
+    eng_a = make_engine((bundle, params), device_blocks=128)
+    ra = eng_a.submit(prompt, max_new_tokens=4)
+    eng_a.run_batch([ra])
+
+    eng_b = make_engine((bundle, params), device_blocks=128)
+    rb = eng_b.submit(prompt, max_new_tokens=4)
+    r_long = eng_b.submit(tuple(range(500, 572)), max_new_tokens=2)  # 72 tok
+    eng_b.run_batch([rb, r_long])
+
+    assert ra.status == rb.status == "finished"
+    assert r_long.status == "finished"
+    assert ra.output_tokens == rb.output_tokens
+    assert _projection(eng_a, ra) == _projection(eng_b, rb)
+    for eng in (eng_a, eng_b):
+        assert check_step_interleave_order(eng.events).passed
+
+
+@pytest.mark.parametrize("chunk", [8, 16, None])
+def test_batch_tokens_invariant_across_chunk_sizes(bp, chunk):
+    """Chunked-default determinism: run_batch emits identical tokens for
+    every prefill_chunk size (None = the default)."""
+    bundle, params = bp
+    prompts = [tuple(range(100 + i, 140 + i)) for i in range(3)]
+
+    def run_all(**kw):
+        eng = ServingEngine(
+            bundle, params, block_size=4, device_blocks=128, cache_len=64, **kw
+        )
+        reqs = [eng.submit(p, max_new_tokens=3) for p in prompts]
+        eng.run_batch(reqs)
+        assert all(r.status == "finished" for r in reqs)
+        return [r.output_tokens for r in reqs]
+
+    baseline = run_all()  # the default
+    kw = {} if chunk is None else {"prefill_chunk": chunk}
+    assert run_all(**kw) == baseline
+
+
+# --------------------------------------------- interleave-order conformance
+
+
+def test_interleave_order_accepts_real_interleaving(bp):
+    """The analyzer accepts a genuinely interleaved multi-request log."""
+    eng = make_engine(bp, device_blocks=128, max_tokens_per_step=24,
+                      prefill_chunk=8)
+    reqs = [
+        eng.submit(tuple(range(100 * (i + 1), 100 * (i + 1) + 12 + 4 * i)),
+                   max_new_tokens=2 + i)
+        for i in range(3)
+    ]
+    eng.run_batch(reqs)
+    assert all(r.status == "finished" for r in reqs)
+    v = check_step_interleave_order(eng.events)
+    assert v.passed, v.reasons
+
+
+def _log(rows):
+    return EventLog.from_dicts(rows)
+
+
+def test_interleave_order_rejects_tampered_logs():
+    """Replayed logs with cross-request reordering are rejected."""
+    # FINISHED_OK without E10 (terminal grammar broken)
+    bad1 = _log([
+        {"name": "request_initialized", "request_id": "r1"},
+        {"name": "request_finished", "request_id": "r1", "status": "FINISHED_OK"},
+    ])
+    assert not check_step_interleave_order(bad1).passed
+
+    # lifecycle event ordered AFTER the terminal (the reordering class the
+    # step loop could introduce if completion didn't retire rows cleanly)
+    bad2 = _log([
+        {"name": "request_initialized", "request_id": "r1"},
+        {"name": "request_finished", "request_id": "r1", "status": "FINISHED_OK"},
+        {"name": "offload_request_finished_no_pending_jobs", "request_id": "r1"},
+    ])
+    assert not check_step_interleave_order(bad2).passed
+
+    # FINISHED_ERROR without an ordered fail-closed witness before E14
+    bad3 = _log([
+        {"name": "request_initialized", "request_id": "r1"},
+        {"name": "offload_request_finished_pending_jobs", "request_id": "r1"},
+        {"name": "fail_closed_refused", "request_id": "r1",
+         "scope": "decode_step", "trigger": "decode_launch_failure"},
+        {"name": "request_finished", "request_id": "r1", "status": "FINISHED_ERROR"},
+    ])
+    assert not check_step_interleave_order(bad3).passed
+
+    # request-scoped step accounting (projection no longer composition-free)
+    bad4 = _log([
+        {"name": "request_initialized", "request_id": "r1"},
+        {"name": "step_scheduled", "request_id": "r1", "step": 0},
+        {"name": "offload_request_finished_no_pending_jobs", "request_id": "r1"},
+        {"name": "request_finished", "request_id": "r1", "status": "FINISHED_OK"},
+    ])
+    assert not check_step_interleave_order(bad4).passed
+
+    # the good counterpart of each is accepted
+    good = _log([
+        {"name": "request_initialized", "request_id": "r1"},
+        {"name": "step_scheduled", "step": 0},
+        {"name": "offload_request_finished_no_pending_jobs", "request_id": "r1"},
+        {"name": "request_finished", "request_id": "r1", "status": "FINISHED_OK"},
+    ])
+    assert check_step_interleave_order(good).passed
