@@ -38,6 +38,18 @@
 #    analyzer-clean traces (step interleave order + metric reconciliation)
 #    and every request finishing its full token budget.  Summary merges
 #    into results/BENCH_serving.json under "mixed_scheduler".
+# 5. Static analysis, two layers.  First the claim-lifecycle invariant
+#    linter (python -m repro.analysis.lint src/repro --strict): AST rules
+#    for emit-site discipline vs PAYLOAD_SCHEMA, pin/unpin balance on
+#    exception exits, fail-closed except handlers in serving/, metric
+#    registration vs analyzer-reconcile drift, wall-clock/unseeded-random
+#    bans, and jit purity — any unsuppressed finding fails the gate, and
+#    every "# lint: allow[rule]" suppression must carry a reason (see
+#    docs/static-analysis.md).  Report lands in results/lint_report.json.
+#    Then mypy with the tolerant scoped config (mypy.ini: src/repro/core,
+#    src/repro/serving, src/repro/analysis) — skipped with a notice when
+#    mypy is not installed (requirements.txt lists it; the container image
+#    may not bake it in).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -54,6 +66,16 @@ python benchmarks/bench_chaos.py
 
 echo "== mixed-step scheduler: decode ITL under prefill admission (fast) =="
 python benchmarks/bench_scheduler.py --fast
+
+echo "== static analysis: invariant linter (strict) =="
+python -m repro.analysis.lint src/repro --strict
+
+echo "== static analysis: mypy (scoped, tolerant) =="
+if python -c "import mypy" >/dev/null 2>&1; then
+  python -m mypy --config-file mypy.ini
+else
+  echo "mypy not installed — skipping (pip install -r requirements.txt for full coverage)"
+fi
 
 echo "== BENCH_serving.json =="
 cat results/BENCH_serving.json

@@ -1,0 +1,32 @@
+"""Static claim-lifecycle invariant linter (stdlib ``ast`` only).
+
+Every invariant the lowering relation depends on — ordered lifecycle
+events, claim-scoped outcomes, fail-closed refusal with trigger
+attribution — is enforced dynamically by ``core/analyzer.py`` replaying
+event logs.  A dynamic check only fires after a violation occurs on a
+covered path; this package moves the same fail-closed philosophy one
+layer left, proving properties of the *source tree* that the analyzer
+would otherwise have to catch at runtime:
+
+  emit-site            (L1)  event emission happens only at boundary
+                             modules, with literal names and payload
+                             keyword sets matching core/events.py's
+                             PAYLOAD_SCHEMA
+  pin-balance          (L2)  every pin_chain is matched by an
+                             unpin_chain on exception exits
+  fail-closed-except   (L3)  no except handler in serving/ silently
+                             swallows — re-raise, refuse with trigger
+                             attribution, or carry the fault
+  metric-drift         (L4)  every registered metric family is either
+                             reconciled against the event log or
+                             explicitly exempted
+  nondeterminism       (L5)  no wall-clock or unseeded randomness
+                             outside the two-clock contract
+  jit-purity           (L6)  no host side effects inside functions
+                             handed to jax.jit / lax.map / lax.scan
+
+Run: ``python -m repro.analysis.lint src/repro [--strict]``.
+Suppress a deliberate finding per site with a trailing or preceding
+comment: ``# lint: allow[rule-id] <reason>`` — a reason is mandatory.
+See docs/static-analysis.md for the rule catalogue and policy.
+"""

@@ -1,0 +1,202 @@
+"""L5 — nondeterminism, and L6 — jit purity.
+
+L5 enforces the two-clock contract (PR 7) statically: the analyzer
+orders by ``seq`` and never by wall-clock, ``Event.ts`` is stamped from
+``time.monotonic()`` at exactly one site, and chaos draws are seeded
+sha256 streams.  Anything else that could make two runs of the same
+seeded campaign diverge — ``time.time()``, ``datetime.now()``, unseeded
+``random``/``np.random`` — is a finding.  ``time.monotonic()`` is legal
+everywhere (durations), ``jax.random`` is key-threaded and always legal,
+and ``np.random.default_rng(seed)`` / ``random.Random(seed)`` with an
+explicit seed are the sanctioned generator constructions.
+
+L6 is batch-invariance at the compilation boundary: a function handed to
+``jax.jit`` / ``lax.map`` / ``lax.scan`` retraces and replays on the
+compiler's schedule, so a lexical emit, metric increment, print or clock
+read inside it would fire 0-or-N times per logical step and break the
+event/metric reconciliation.  Host side effects stay outside the traced
+region, full stop.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional
+
+from repro.analysis.framework import FileContext, Finding, Rule, dotted_name
+
+_WALL_CLOCK = frozenset({"time.time", "datetime.now", "datetime.utcnow", "datetime.today",
+                         "datetime.datetime.now", "datetime.datetime.utcnow"})
+_NP_RANDOM_LEGACY = frozenset(
+    {
+        "rand", "randn", "randint", "random", "random_sample", "choice",
+        "shuffle", "permutation", "seed", "uniform", "normal", "standard_normal",
+    }
+)
+_PY_RANDOM_UNSEEDED = frozenset(
+    {
+        "random", "randint", "randrange", "choice", "choices", "shuffle",
+        "sample", "uniform", "gauss", "seed", "getrandbits",
+    }
+)
+# host side effects banned lexically inside traced functions
+_IMPURE_ATTRS = frozenset({"emit", "inc", "increment", "observe"})
+_TRACE_ENTRY_ATTRS = frozenset({"jit", "map", "scan"})  # jax.jit / lax.map / lax.scan
+
+
+class NondeterminismRule(Rule):
+    rule_id = "nondeterminism"
+    doc = (
+        "no wall-clock (time.time/datetime.now) or unseeded randomness; "
+        "time.monotonic + seeded generators + jax.random only"
+    )
+
+    def _check_call(self, ctx: FileContext, node: ast.Call) -> Iterable[Finding]:
+        name = dotted_name(node.func)
+        if name in _WALL_CLOCK:
+            yield Finding(
+                rule=self.rule_id,
+                path=ctx.rel,
+                line=node.lineno,
+                message=f"wall-clock call {name}()",
+                hint="use time.monotonic() for durations; Event.ts (stamped in "
+                "EventLog.emit) is the only sanctioned clock field",
+            )
+        elif name.startswith("np.random.") or name.startswith("numpy.random."):
+            leaf = name.rsplit(".", 1)[1]
+            if leaf in _NP_RANDOM_LEGACY:
+                yield Finding(
+                    rule=self.rule_id,
+                    path=ctx.rel,
+                    line=node.lineno,
+                    message=f"unseeded legacy numpy random {name}()",
+                    hint="construct np.random.default_rng(seed) and thread it",
+                )
+            elif leaf == "default_rng" and not node.args:
+                yield Finding(
+                    rule=self.rule_id,
+                    path=ctx.rel,
+                    line=node.lineno,
+                    message="np.random.default_rng() without a seed",
+                    hint="pass an explicit seed so campaigns replay",
+                )
+        elif name.startswith("random."):
+            leaf = name.split(".", 1)[1]
+            if leaf in _PY_RANDOM_UNSEEDED:
+                yield Finding(
+                    rule=self.rule_id,
+                    path=ctx.rel,
+                    line=node.lineno,
+                    message=f"unseeded stdlib random.{leaf}()",
+                    hint="construct random.Random(seed), or derive draws "
+                    "statelessly like chaos.py's per-(seed,site) sha256",
+                )
+        elif name == "random.Random" and not node.args:
+            yield Finding(
+                rule=self.rule_id,
+                path=ctx.rel,
+                line=node.lineno,
+                message="random.Random() without a seed",
+                hint="pass an explicit seed so campaigns replay",
+            )
+
+    def run(self, files: List[FileContext]) -> Iterable[Finding]:
+        for ctx in files:
+            uses_py_random = any(
+                isinstance(n, ast.Import) and any(a.name == "random" for a in n.names)
+                for n in ast.walk(ctx.tree)
+            )
+            for node in ast.walk(ctx.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = dotted_name(node.func)
+                if name.startswith("random.") and not uses_py_random:
+                    continue  # jax.random aliased locally, etc.
+                yield from self._check_call(ctx, node)
+                # wall-clock smuggled into an event payload keyword
+                if isinstance(node.func, ast.Attribute) and node.func.attr == "emit":
+                    for kw in node.keywords:
+                        if kw.arg in (None, "ts"):
+                            continue
+                        for sub in ast.walk(kw.value):
+                            if (
+                                isinstance(sub, ast.Call)
+                                and dotted_name(sub.func).startswith("time.")
+                            ):
+                                yield Finding(
+                                    rule=self.rule_id,
+                                    path=ctx.rel,
+                                    line=node.lineno,
+                                    message=f"clock call in payload key "
+                                    f"{kw.arg!r} of emit",
+                                    hint="payloads must stay clock-free — "
+                                    "Event.ts is the tracing channel",
+                                )
+
+
+def _resolve_traced_fn(arg: ast.AST, ctx: FileContext) -> Optional[ast.AST]:
+    """The function node handed to a trace entry, when lexically resolvable:
+    a lambda, or a Name bound to a def in the same module."""
+    if isinstance(arg, ast.Lambda):
+        return arg
+    if isinstance(arg, ast.Name):
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) and node.name == arg.id:
+                return node
+    return None  # cross-module attribute: out of lexical reach
+
+
+def _impurities(fn: ast.AST) -> Iterable[ast.AST]:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            f = node.func
+            if isinstance(f, ast.Attribute) and f.attr in _IMPURE_ATTRS:
+                yield node
+            elif isinstance(f, ast.Name) and f.id in ("print", "open"):
+                yield node
+            elif dotted_name(f).startswith("time."):
+                yield node
+
+
+class JitPurityRule(Rule):
+    rule_id = "jit-purity"
+    doc = (
+        "no emit/metric/print/clock side effects lexically inside functions "
+        "passed to jax.jit, lax.map or lax.scan"
+    )
+
+    def run(self, files: List[FileContext]) -> Iterable[Finding]:
+        for ctx in files:
+            traced: List[ast.AST] = []
+            for node in ast.walk(ctx.tree):
+                # decorators: @jax.jit / @jit / @partial(jax.jit, ...)
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    for dec in node.decorator_list:
+                        d = dec.func if isinstance(dec, ast.Call) else dec
+                        names = {dotted_name(d)}
+                        if isinstance(dec, ast.Call) and dec.args:
+                            names.add(dotted_name(dec.args[0]))
+                        if any(n in ("jax.jit", "jit") for n in names):
+                            traced.append(node)
+                # call forms: jax.jit(f), lax.map(f, xs), lax.scan(f, ...)
+                if isinstance(node, ast.Call):
+                    name = dotted_name(node.func)
+                    if name in ("jax.jit", "jit") and node.args:
+                        fn = _resolve_traced_fn(node.args[0], ctx)
+                        if fn is not None:
+                            traced.append(fn)
+                    elif name in ("lax.map", "jax.lax.map", "lax.scan", "jax.lax.scan") and node.args:
+                        fn = _resolve_traced_fn(node.args[0], ctx)
+                        if fn is not None:
+                            traced.append(fn)
+            for fn in traced:
+                for bad in _impurities(fn):
+                    yield Finding(
+                        rule=self.rule_id,
+                        path=ctx.rel,
+                        line=bad.lineno,
+                        message=f"host side effect inside traced function: "
+                        f"{ast.unparse(bad)[:60]}",
+                        hint="hoist the emit/metric/clock out of the jitted "
+                        "region — traced code replays on the compiler's "
+                        "schedule, not the lifecycle's",
+                    )

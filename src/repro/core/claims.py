@@ -211,6 +211,7 @@ class ClaimRegistry:
     # -- lifecycle helpers (ordered: transition first, then the event) --------
     def mark(self, claim: ResidentClaim, new_state: ClaimState, event: str, **payload) -> None:
         claim.transition(new_state)
+        # lint: allow[emit-site] state-transition helper: event name varies with the target ClaimState; runtime PAYLOAD_SCHEMA validation still applies
         self._events.emit(event, claim_id=claim.claim_id, object_id=claim.object_id, **payload)
 
     # -- expiry ----------------------------------------------------------------

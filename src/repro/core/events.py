@@ -103,6 +103,100 @@ NATIVE_EVENTS = (
 
 ALL_EVENT_NAMES = frozenset(E.values()) | frozenset(NATIVE_EVENTS)
 
+# --- per-event payload schemas ------------------------------------------------
+# One schema, two enforcement layers: ``EventLog.emit`` validates the payload
+# keyword set at runtime (below), and the static linter (repro.analysis,
+# rule emit-site) proves every literal emit site conforms without running it.
+# Keys listed here are PAYLOAD keys — ``request_id``/``claim_id``/``ts`` are
+# dedicated Event fields, never payload.  ``object_id`` IS payload: the claim
+# ledger's ``mark`` helper threads it through ``**payload``.
+#
+# ``PAYLOAD_SCHEMA[name]`` holds the required keys; ``PAYLOAD_OPTIONAL[name]``
+# the additional keys an emit site may carry (variant shapes of the same
+# boundary, e.g. the pool-pressure admission refusal carries its accounting).
+PAYLOAD_SCHEMA: Dict[str, frozenset] = {
+    # paper events E0–E14
+    "request_initialized": frozenset({"n_tokens", "claim_metadata"}),
+    "offload_lookup_result": frozenset({"hit_tokens", "hit_blocks", "tier_hits"}),
+    "offload_store_job_created": frozenset({"job_id", "block_ids", "tier"}),
+    "offload_worker_transfer_submitted": frozenset(
+        {"block_id", "direction", "nbytes", "attempt"}
+    ),
+    "offload_worker_transfer_finished": frozenset({"block_id", "direction", "ok", "reason"}),
+    "resident_claim_offloaded": frozenset({"object_id", "n_blocks", "tier"}),
+    "resident_claim_restore_required": frozenset({"object_id", "predicate"}),
+    "offload_load_job_created": frozenset({"job_id", "block_ids"}),
+    "resident_claim_restored": frozenset({"object_id"}),
+    "offload_job_completed": frozenset({"job_id", "ok"}),
+    "offload_request_finished_no_pending_jobs": frozenset(),
+    "offload_worker_load_failed": frozenset({"block_id", "reason"}),
+    "scheduler_resident_claim_restoration_failed": frozenset(
+        {"object_id", "reason", "trigger"}
+    ),
+    "scheduler_active_request_refused": frozenset({"blocking_claim_ids", "reason", "trigger"}),
+    "offload_request_finished_pending_jobs": frozenset(),
+    # native-runtime extensions
+    "resident_claim_accepted": frozenset(
+        {"object_id", "predicate", "mode", "priority", "duration_s"}
+    ),
+    "resident_claim_rejected": frozenset({"object_id", "reason"}),
+    "claim_materialized": frozenset(
+        {"object_id", "observation_point", "predicate", "materialized_tokens"}
+    ),
+    "resident_claim_demoted": frozenset({"object_id", "before_loss", "trigger"}),
+    "resident_claim_expired": frozenset({"object_id", "boundary", "age_s"}),
+    "resident_claim_harmed": frozenset({"object_id", "cause", "predicate"}),
+    "allocator_victim_excluded": frozenset({"block_id", "protected_by"}),
+    "scheduler_admission_refused": frozenset({"blocking_claim_ids", "conflict_action", "trigger"}),
+    "claim_footprint_accounted": frozenset({"footprint_bytes", "n_blocks"}),
+    "block_stored": frozenset({"block_id", "chain", "n_tokens"}),
+    "block_removed": frozenset({"block_id", "chain", "reason"}),
+    "request_finished": frozenset({"status"}),
+    "route_decision": frozenset({"worker", "route_cost_tokens", "overlap_scores"}),
+    "route_placement": frozenset({"worker", "reason"}),
+    "route_reuse_attributed": frozenset({"worker", "reuse_hit_tokens", "success"}),
+    "pressure_eviction": frozenset({"block_id", "priority"}),
+    "transfer_job_enqueued": frozenset({"job_id", "kind", "n_blocks"}),
+    "transfer_batch_executed": frozenset({"job_id", "n_blocks", "nbytes"}),
+    "offload_tier_spill": frozenset({"block_id", "from_tier", "to_tier", "nbytes"}),
+    "offload_tier_promote": frozenset({"block_id", "from_tier", "to_tier"}),
+    "batch_scheduled": frozenset({"batch_size", "request_ids"}),
+    "step_scheduled": frozenset(
+        {
+            "step",
+            "n_rows",
+            "n_decode",
+            "n_feed",
+            "prefill_rows",
+            "prefill_tokens",
+            "step_tokens",
+            "budget",
+        }
+    ),
+    "transfer_retry_scheduled": frozenset(
+        {"job_id", "block_id", "direction", "attempt", "max_attempts", "delay_s", "reason"}
+    ),
+    "tier_quarantined": frozenset({"tier", "consecutive_failures", "trigger"}),
+    "stage_latency": frozenset({"stage", "seconds"}),
+    "fail_closed_refused": frozenset({"scope", "trigger", "reason"}),
+}
+
+PAYLOAD_OPTIONAL: Dict[str, frozenset] = {
+    # pool-pressure refusal carries the allocator accounting; the claim- and
+    # shape-conflict refusals carry the stage that refused instead.
+    "scheduler_admission_refused": frozenset(
+        {"stage", "needed_blocks", "free_blocks", "evictable_blocks"}
+    ),
+    # restoration failure at a terminal request carries the request status.
+    "scheduler_resident_claim_restoration_failed": frozenset({"request_status"}),
+    # only the pending-job variant of E14 knows which job was pending.
+    "offload_request_finished_pending_jobs": frozenset({"job_id"}),
+    # claim-registration placements carry the claim predicate.
+    "route_placement": frozenset({"predicate"}),
+}
+
+assert frozenset(PAYLOAD_SCHEMA) == ALL_EVENT_NAMES, "every event name needs a payload schema"
+
 
 @dataclass(frozen=True)
 class Event:
@@ -142,10 +236,26 @@ class EventLog:
         request_id: Optional[str] = None,
         claim_id: Optional[str] = None,
         ts: Optional[float] = None,
+        _validate: bool = True,
         **payload: Any,
     ) -> Event:
         if name not in ALL_EVENT_NAMES:
             raise ValueError(f"unknown event name {name!r}")
+        if _validate:
+            required = PAYLOAD_SCHEMA[name]
+            provided = frozenset(payload)
+            missing = required - provided
+            if missing:
+                raise ValueError(
+                    f"event {name!r} payload missing required keys {sorted(missing)} "
+                    f"(got {sorted(provided)})"
+                )
+            unknown = provided - required - PAYLOAD_OPTIONAL.get(name, frozenset())
+            if unknown:
+                raise ValueError(
+                    f"event {name!r} payload carries undeclared keys {sorted(unknown)} "
+                    f"— extend PAYLOAD_SCHEMA/PAYLOAD_OPTIONAL in core/events.py"
+                )
         with self._lock:
             ev = Event(
                 next(self._counter),
@@ -179,11 +289,15 @@ class EventLog:
         log = EventLog()
         for r in rows:
             r = dict(r)
-            log.emit(
+            # Replay path: names/payloads come from serialized (possibly
+            # deliberately mutated) traces, so the payload schema is NOT
+            # re-validated — replayed logs are analyzed, never trusted.
+            log.emit(  # lint: allow[emit-site] replay of serialized traces; name/payload dynamic by design, schema enforced at the original emission
                 r.pop("name"),
                 request_id=r.pop("request_id", None),
                 claim_id=r.pop("claim_id", None),
                 ts=r.pop("ts", None),
+                _validate=False,
                 **{k: v for k, v in r.items() if k != "seq"},
             )
         return log

@@ -53,7 +53,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_path: Path, moe_str
     from repro.models.layers import set_attn_sharding
 
     set_attn_sharding(attn_sharding)
-    t0 = time.time()
+    t0 = time.monotonic()
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     chips = mesh.devices.size
     record = {
@@ -73,9 +73,9 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_path: Path, moe_str
         return record
 
     lowered = lower_cell(cell)
-    t_lower = time.time()
+    t_lower = time.monotonic()
     compiled = lowered.compile()
-    t_compile = time.time()
+    t_compile = time.monotonic()
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()

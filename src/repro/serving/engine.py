@@ -352,7 +352,7 @@ class ServingEngine(EngineCore):
                         protected_claims=protected,
                     )
                 if pin:
-                    blk.ref += 1
+                    pin_chain((blk,))
                     chain.append(blk)
         except PoolExhausted:
             unpin_chain(chain)
@@ -781,8 +781,7 @@ class ServingEngine(EngineCore):
         """Dense-assembly prefill (decode_mode="dense"): gathers the block
         chain into a contiguous per-request cache."""
         cached = req.cached_tokens
-        for b in dev_blocks:
-            b.ref += 1
+        pin_chain(dev_blocks)
         try:
             if cached == 0:
                 t0 = time.monotonic()
@@ -815,14 +814,12 @@ class ServingEngine(EngineCore):
             cv = np.asarray(cache["v"][:, 0])
             # dense decode owns a private cache copy, so the pins taken by
             # the store (to protect the chain mid-store) release right away
-            for b in self._store_prefix_blocks(req, ck, cv, len(req.tokens)):
-                b.ref -= 1
+            unpin_chain(self._store_prefix_blocks(req, ck, cv, len(req.tokens)))
             self._materialize_claims(
                 req, len(req.tokens) - len(req.tokens) % self.block_size
             )
         finally:
-            for b in dev_blocks:
-                b.ref -= 1
+            unpin_chain(dev_blocks)
         return {"req": req, "cache": cache, "logits": logits, "pos": len(req.tokens)}
 
     @staticmethod

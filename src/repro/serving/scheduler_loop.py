@@ -336,6 +336,7 @@ class StepLoop:
                 # evict this request's prefix before its turn comes
                 from repro.serving.kv_cache import pin_chain
 
+                # lint: allow[pin-balance] ownership transfers to the Row: released in _retire, _store_row's handlers, and the decode-launch failure path
                 pin_chain(dev_blocks)
                 self.rows.append(Row(req, dev_blocks, req.cached_tokens))
 

@@ -158,7 +158,7 @@ class TransferQueue:
         while True:
             try:
                 job = self._q.get_nowait()
-            except queue.Empty:
+            except queue.Empty:  # lint: allow[fail-closed-except] drain termination: Empty means every stranded waiter has been poisoned
                 return
             if job is not None:
                 job.error = TransferWorkerDied(

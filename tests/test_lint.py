@@ -1,0 +1,519 @@
+"""Bad-code suite for the claim-lifecycle invariant linter.
+
+Mirrors ``core/bad_lowering.py``'s structure: every rule gets a catalogue
+of small source fixtures that MUST trip it (violating) and fixtures that
+MUST pass it (conforming) — the linter is itself under test, both
+directions.  On top of the per-rule catalogue:
+
+  - the real tree lints clean (zero unsuppressed findings) and every
+    suppression in it carries a reason;
+  - a tamper test: deleting the ``finally``-unpin from a conforming
+    fixture makes the pin-balance finding appear;
+  - suppression semantics: a reasoned ``# lint: allow[...]`` suppresses,
+    a reasonless one becomes its own finding while the original stands;
+  - strict-mode CLI exit codes and the JSON report shape;
+  - the runtime half of the one-schema/two-layers contract:
+    ``EventLog.emit`` enforces ``PAYLOAD_SCHEMA`` on the same payloads
+    the emit-site rule checks statically.
+"""
+import json
+import textwrap
+from dataclasses import dataclass
+from pathlib import Path
+from typing import List
+
+import pytest
+
+from repro.analysis.framework import Finding
+from repro.analysis.lint import ALL_RULES, lint_paths
+from repro.analysis.lint import main as lint_main
+from repro.core.events import ALL_EVENT_NAMES, PAYLOAD_SCHEMA, EventLog
+
+ROOT = Path(__file__).resolve().parents[1]
+SRC = ROOT / "src" / "repro"
+
+
+@dataclass(frozen=True)
+class Case:
+    rule: str
+    name: str
+    filename: str  # controls module_stem / serving-scope matching
+    code: str
+    violating: bool
+
+
+CASES = [
+    # ---------------------------------------------------------- emit-site
+    Case(
+        "emit-site",
+        "non_boundary_module",
+        "helper.py",
+        """
+        def note(log):
+            log.emit("stage_latency", stage="prefill", seconds=0.1)
+        """,
+        violating=True,
+    ),
+    Case(
+        "emit-site",
+        "missing_required_payload",
+        "core_engine.py",
+        """
+        def note(log):
+            log.emit("stage_latency", stage="prefill")
+        """,
+        violating=True,
+    ),
+    Case(
+        "emit-site",
+        "unknown_event_name",
+        "core_engine.py",
+        """
+        def note(log):
+            log.emit("totally_unknown_event")
+        """,
+        violating=True,
+    ),
+    Case(
+        "emit-site",
+        "dynamic_event_name",
+        "core_engine.py",
+        """
+        def note(log, name):
+            log.emit(name, stage="prefill", seconds=0.1)
+        """,
+        violating=True,
+    ),
+    Case(
+        "emit-site",
+        "undeclared_payload_key",
+        "core_engine.py",
+        """
+        def note(log):
+            log.emit("stage_latency", stage="prefill", seconds=0.1, color="red")
+        """,
+        violating=True,
+    ),
+    Case(
+        "emit-site",
+        "boundary_full_payload",
+        "core_engine.py",
+        """
+        def note(log):
+            log.emit("stage_latency", request_id="r1", stage="prefill", seconds=0.5)
+        """,
+        violating=False,
+    ),
+    # -------------------------------------------------------- pin-balance
+    Case(
+        "pin-balance",
+        "pin_without_exception_unwind",
+        "helper.py",
+        """
+        def hold(blocks, work):
+            pin_chain(blocks)
+            work(blocks)
+        """,
+        violating=True,
+    ),
+    Case(
+        "pin-balance",
+        "raw_ref_twiddle",
+        "helper.py",
+        """
+        def bump(blk):
+            blk.ref += 1
+        """,
+        violating=True,
+    ),
+    Case(
+        "pin-balance",
+        "pin_with_finally_unwind",
+        "helper.py",
+        """
+        def hold(blocks, work):
+            pin_chain(blocks)
+            try:
+                work(blocks)
+            finally:
+                unpin_chain(blocks)
+        """,
+        violating=False,
+    ),
+    Case(
+        "pin-balance",
+        "pin_with_except_unwind",
+        "helper.py",
+        """
+        def hold(blocks, work):
+            pin_chain(blocks)
+            try:
+                work(blocks)
+            except Exception:
+                unpin_chain(blocks)
+                raise
+        """,
+        violating=False,
+    ),
+    # ------------------------------------------------- fail-closed-except
+    Case(
+        "fail-closed-except",
+        "bare_swallow",
+        "serving/handler.py",
+        """
+        def step(risky):
+            try:
+                risky()
+            except Exception:
+                pass
+        """,
+        violating=True,
+    ),
+    Case(
+        "fail-closed-except",
+        "logged_but_swallowed",
+        "serving/handler.py",
+        """
+        def step(risky, errors):
+            try:
+                risky()
+            except ValueError as exc:
+                errors.append(str(exc))
+        """,
+        violating=True,
+    ),
+    Case(
+        "fail-closed-except",
+        "refusal_helper",
+        "serving/handler.py",
+        """
+        def step(self, req, risky):
+            try:
+                risky()
+            except Exception as exc:
+                self._fail_closed_error(
+                    req, scope="decode_step", trigger="t", reason=str(exc)
+                )
+        """,
+        violating=False,
+    ),
+    Case(
+        "fail-closed-except",
+        "fault_carried_to_join",
+        "serving/handler.py",
+        """
+        def run(job):
+            try:
+                job.fn()
+            except BaseException as exc:
+                job.error = exc
+        """,
+        violating=False,
+    ),
+    Case(
+        "fail-closed-except",
+        "reraise",
+        "serving/handler.py",
+        """
+        def step(risky):
+            try:
+                risky()
+            except KeyError as exc:
+                raise RuntimeError("mapped") from exc
+        """,
+        violating=False,
+    ),
+    # ------------------------------------------------------- metric-drift
+    Case(
+        "metric-drift",
+        "registered_not_reconciled",
+        "helper.py",
+        """
+        def setup(registry):
+            return registry.counter("bogus_total", "never reconciled")
+        """,
+        violating=True,
+    ),
+    Case(
+        "metric-drift",
+        "unresolvable_increment",
+        "helper.py",
+        """
+        def tick(self):
+            self._mystery.increment("trigger")
+        """,
+        violating=True,
+    ),
+    Case(
+        "metric-drift",
+        "registered_and_reconciled",
+        "helper.py",
+        """
+        def setup(registry):
+            fam = registry.counter("fail_closed_total", "h", labels=("trigger",))
+            fam.increment("boom")
+            return fam
+
+        def check(snap):
+            return _counter_series(snap, "fail_closed_total")
+        """,
+        violating=False,
+    ),
+    # ---------------------------------------------------- nondeterminism
+    Case(
+        "nondeterminism",
+        "wall_clock",
+        "helper.py",
+        """
+        import time
+
+        def stamp():
+            return time.time()
+        """,
+        violating=True,
+    ),
+    Case(
+        "nondeterminism",
+        "unseeded_stdlib_random",
+        "helper.py",
+        """
+        import random
+
+        def draw():
+            return random.random()
+        """,
+        violating=True,
+    ),
+    Case(
+        "nondeterminism",
+        "legacy_numpy_random",
+        "helper.py",
+        """
+        import numpy as np
+
+        def draw():
+            return np.random.rand(3)
+        """,
+        violating=True,
+    ),
+    Case(
+        "nondeterminism",
+        "clock_in_emit_payload",
+        "core_engine.py",
+        """
+        import time
+
+        def note(log):
+            log.emit("stage_latency", stage="x", seconds=time.monotonic())
+        """,
+        violating=True,
+    ),
+    Case(
+        "nondeterminism",
+        "sanctioned_clocks_and_rngs",
+        "helper.py",
+        """
+        import random
+        import time
+
+        import numpy as np
+
+        def ok():
+            t = time.monotonic()
+            rng = np.random.default_rng(1234)
+            r = random.Random(7)
+            return t, rng, r
+        """,
+        violating=False,
+    ),
+    # -------------------------------------------------------- jit-purity
+    Case(
+        "jit-purity",
+        "emit_inside_jitted",
+        "helper.py",
+        """
+        import jax
+
+        @jax.jit
+        def step(x, log):
+            log.emit("stage_latency", stage="x", seconds=0.1)
+            return x
+        """,
+        violating=True,
+    ),
+    Case(
+        "jit-purity",
+        "print_inside_scan_body",
+        "helper.py",
+        """
+        from jax import lax
+
+        def scan_all(xs):
+            def body(carry, x):
+                print(x)
+                return carry, x
+            return lax.scan(body, 0, xs)
+        """,
+        violating=True,
+    ),
+    Case(
+        "jit-purity",
+        "clock_inside_jit_call_form",
+        "helper.py",
+        """
+        import time
+        import jax
+
+        def slow_step(x):
+            t0 = time.monotonic()
+            return x, t0
+
+        fast = jax.jit(slow_step)
+        """,
+        violating=True,
+    ),
+    Case(
+        "jit-purity",
+        "pure_jitted_fn",
+        "helper.py",
+        """
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def step(x):
+            return jnp.sum(x) * 2
+        """,
+        violating=False,
+    ),
+]
+
+
+def _lint_snippet(tmp_path: Path, case: Case) -> List[Finding]:
+    path = tmp_path / case.filename
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(textwrap.dedent(case.code))
+    return [
+        f
+        for f in lint_paths([str(path)], only=(case.rule,))
+        if not f.suppressed
+    ]
+
+
+@pytest.mark.parametrize(
+    "case", CASES, ids=[f"{c.rule}-{c.name}" for c in CASES]
+)
+def test_fixture_catalogue(tmp_path, case):
+    findings = _lint_snippet(tmp_path, case)
+    if case.violating:
+        assert findings, f"{case.rule}/{case.name}: expected a finding, got none"
+        assert all(f.rule == case.rule for f in findings)
+    else:
+        assert not findings, (
+            f"{case.rule}/{case.name}: expected clean, got "
+            + "; ".join(f"{f.location()} {f.message}" for f in findings)
+        )
+
+
+def test_every_rule_has_violating_and_conforming_fixtures():
+    """The catalogue covers every registered rule in both directions."""
+    rules = {cls.rule_id for cls in ALL_RULES}
+    violating = {c.rule for c in CASES if c.violating}
+    conforming = {c.rule for c in CASES if not c.violating}
+    assert violating == rules
+    assert conforming == rules
+    for rule in rules:
+        assert sum(1 for c in CASES if c.rule == rule and c.violating) >= 2
+
+
+def test_real_tree_lints_clean():
+    """The merged tree passes its own gate: zero unsuppressed findings,
+    and every suppression documents why."""
+    findings = lint_paths([str(SRC)])
+    active = [f for f in findings if not f.suppressed]
+    assert not active, "; ".join(
+        f"{f.location()} {f.rule} {f.message}" for f in active
+    )
+    suppressed = [f for f in findings if f.suppressed]
+    assert suppressed, "expected the tree's deliberate sites to be suppressed"
+    assert all(f.suppress_reason for f in suppressed)
+
+
+def test_tamper_with_finally_block_is_caught(tmp_path):
+    """Mutating the conforming pin fixture — emptying the finally-unpin —
+    must flip it to a finding (the rule reads the unwind, not the try)."""
+    good = next(
+        c for c in CASES if c.rule == "pin-balance" and c.name == "pin_with_finally_unwind"
+    )
+    tampered = textwrap.dedent(good.code).replace("unpin_chain(blocks)", "pass")
+    assert "unpin_chain" not in tampered  # the mutation actually landed
+    path = tmp_path / "helper.py"
+    path.write_text(tampered)
+    findings = [f for f in lint_paths([str(path)], only=("pin-balance",)) if not f.suppressed]
+    assert findings and "no unpin_chain" in findings[0].message
+
+
+def test_suppression_with_reason_suppresses(tmp_path):
+    path = tmp_path / "helper.py"
+    path.write_text(
+        "import time\n"
+        "t = time.time()  # lint: allow[nondeterminism] frozen test fixture\n"
+    )
+    findings = lint_paths([str(path)], only=("nondeterminism",))
+    assert findings and all(f.suppressed for f in findings)
+    assert findings[0].suppress_reason == "frozen test fixture"
+
+
+def test_reasonless_suppression_does_not_suppress(tmp_path):
+    """An allow[] without a reason leaves the original finding active AND
+    adds a finding about the undocumented suppression itself."""
+    path = tmp_path / "helper.py"
+    path.write_text("import time\nt = time.time()  # lint: allow[nondeterminism]\n")
+    findings = [f for f in lint_paths([str(path)], only=("nondeterminism",)) if not f.suppressed]
+    messages = [f.message for f in findings]
+    assert any("wall-clock" in m for m in messages)
+    assert any("carries no reason" in m for m in messages)
+
+
+def test_strict_cli_exit_codes_and_report(tmp_path):
+    bad = tmp_path / "helper.py"
+    bad.write_text("import time\nt = time.time()\n")
+    report = tmp_path / "report.json"
+    assert lint_main([str(bad), "--strict", "--json", str(report)]) == 1
+    data = json.loads(report.read_text())
+    assert data["counts"]["findings"] >= 1
+    assert data["counts"]["by_rule"]["nondeterminism"] >= 1
+    assert all({"rule", "file", "line", "message", "hint"} <= set(f) for f in data["findings"])
+
+    good = tmp_path / "clean.py"
+    good.write_text("X = 1\n")
+    assert lint_main([str(good), "--strict", "--json", ""]) == 0
+
+
+def test_rule_filter_cli(tmp_path):
+    """--rules narrows the run: the wall-clock file passes a pin-only run."""
+    bad = tmp_path / "helper.py"
+    bad.write_text("import time\nt = time.time()\n")
+    assert lint_main([str(bad), "--strict", "--rules", "pin-balance", "--json", ""]) == 0
+
+
+# --------------------------------------------------------------- runtime twin
+
+
+def test_payload_schema_covers_every_event():
+    assert frozenset(PAYLOAD_SCHEMA) == ALL_EVENT_NAMES
+
+
+def test_runtime_payload_validation_rejects_what_the_linter_rejects():
+    """One schema, two enforcement layers: EventLog.emit applies the same
+    required/undeclared judgments at runtime that emit-site applies
+    statically."""
+    log = EventLog()
+    with pytest.raises(ValueError, match="missing required keys"):
+        log.emit("stage_latency", stage="prefill")
+    with pytest.raises(ValueError, match="undeclared keys"):
+        log.emit("stage_latency", stage="prefill", seconds=0.1, color="red")
+    with pytest.raises(ValueError, match="unknown event name"):
+        log.emit("totally_unknown_event")
+    ev = log.emit("stage_latency", stage="prefill", seconds=0.1)
+    assert ev.payload == {"stage": "prefill", "seconds": 0.1}

@@ -163,7 +163,7 @@ def test_counters_thread_safe_under_contention():
 
 def test_event_ts_stamped_and_json_round_trip():
     log = EventLog()
-    a = log.emit("request_initialized", request_id="r1")
+    a = log.emit("request_initialized", request_id="r1", n_tokens=4, claim_metadata=[])
     b = log.emit("request_finished", request_id="r1", status="FINISHED_OK", ts=123.5)
     assert a.ts > 0  # stamped from the monotonic clock
     assert b.ts == 123.5  # explicit override honored
@@ -180,7 +180,7 @@ def test_ts_not_in_payload():
     payload)`` projections (the blast-radius byte-identity surface) must not
     see wall-clock noise."""
     log = EventLog()
-    e = log.emit("request_initialized", request_id="r1")
+    e = log.emit("request_initialized", request_id="r1", n_tokens=4, claim_metadata=[])
     assert "ts" not in e.payload
 
 

@@ -79,3 +79,38 @@ def test_snapshot_path_b_fail_closed(snap_bundle):
     assert v.passed, v.reasons
     e13 = eng.events.named("scheduler_active_request_refused")[0]
     assert e13.payload["blocking_claim_ids"] == [claim.claim_id]
+
+
+def test_snapshot_decode_launch_failure_fails_closed(snap_bundle):
+    """Static-analysis audit regression (fail-closed-except): the
+    ``except Exception`` at serve_batch's decode-launch boundary was the
+    one handler in serving/ with no test driving it.  A decode-step
+    exception must not strand any batch member non-terminal: every
+    request ends FINISHED_ERROR through the ordered refusal path with
+    ``decode_launch_failure`` attribution, and serve_batch itself must
+    NOT raise."""
+    bundle, params = snap_bundle
+    eng = SnapshotEngine(bundle, params)
+
+    def boom(params, state, toks, pos):
+        raise RuntimeError("injected decode launch failure")
+
+    eng._jit_decode = boom
+    reqs = eng.serve_batch([PREFIX + (30,), PREFIX + (40,)], max_new_tokens=2)
+    assert len(reqs) == 2
+    for r in reqs:
+        assert r.status == "error"
+        assert r.error.startswith("decode_launch_failure:")
+        fin = [
+            e for e in eng.events.named("request_finished")
+            if e.request_id == r.request_id
+        ]
+        assert fin and fin[0].payload["status"] == "FINISHED_ERROR"
+        wit = [
+            e for e in eng.events.named("fail_closed_refused")
+            if e.request_id == r.request_id
+        ]
+        assert wit and wit[0].payload["trigger"] == "decode_launch_failure"
+        assert wit[0].payload["scope"] == "decode_step"
+    assert eng.fail_closed_total() == {"decode_launch_failure": 2}
+    assert validate_event_sequence(eng.events).passed
