@@ -38,7 +38,17 @@
 #    analyzer-clean traces (step interleave order + metric reconciliation)
 #    and every request finishing its full token budget.  Summary merges
 #    into results/BENCH_serving.json under "mixed_scheduler".
-# 5. Static analysis, two layers.  First the claim-lifecycle invariant
+# 5. Runs the radix prefix-reuse bench (benchmarks/bench_radix.py --fast):
+#    replays a prefix-heavy multi-turn chat trace (shared system prompt,
+#    per-session turns that extend the previous turn's full sequence) on
+#    the sharing engine and on a prefix_sharing=False baseline, gating on
+#    effective capacity (requests served before the first pressure
+#    eviction) >= 1.5x the baseline, warm-vs-cold logits byte-identity
+#    over reused pages, zero analyzer violations on both traces
+#    (sequence, step interleave, metric reconciliation, shared-page
+#    immutability), and every trace request finishing.  Summary merges
+#    into results/BENCH_serving.json under "radix_reuse".
+# 6. Static analysis, two layers.  First the claim-lifecycle invariant
 #    linter (python -m repro.analysis.lint src/repro --strict): AST rules
 #    for emit-site discipline vs PAYLOAD_SCHEMA, pin/unpin balance on
 #    exception exits, fail-closed except handlers in serving/, metric
@@ -66,6 +76,9 @@ python benchmarks/bench_chaos.py
 
 echo "== mixed-step scheduler: decode ITL under prefill admission (fast) =="
 python benchmarks/bench_scheduler.py --fast
+
+echo "== radix prefix reuse: effective capacity + byte-identity (fast) =="
+python benchmarks/bench_radix.py --fast
 
 echo "== static analysis: invariant linter (strict) =="
 python -m repro.analysis.lint src/repro --strict

@@ -47,6 +47,8 @@ EXEMPT: Dict[str, str] = {
     "engine-visible mirror transfer_retries_total IS reconciled (rule 4)",
     "chaos_faults_injected_total": "plan ground truth: reconciled against the "
     "FaultPlan counters in bench_chaos, not the event log",
+    "pages_shared": "gauge: point-in-time count of device pages with more than "
+    "one live reference, no event witness",
 }
 
 

@@ -557,6 +557,10 @@ def check_metrics_reconcile(log: EventLog, metrics) -> Verdict:
       6. ``scheduler_step_tokens`` total observation count equals the
          number of ``step_scheduled`` events (one histogram sample per
          unified scheduler step, engines without a step loop hold 0 == 0).
+      7. ``prefix_reuse_hits_total`` equals the count of ``prefix_reuse``
+         events (one per admission that found resident prefix pages).
+      8. ``cow_copies_total`` equals the count of ``page_cow`` events (one
+         per copy-on-write at a shared-page divergence point).
 
     ``metrics`` may be a live ``serving.metrics.MetricsRegistry`` or its
     ``snapshot()`` dict (the serialized form the CI artifacts carry).
@@ -649,7 +653,101 @@ def check_metrics_reconcile(log: EventLog, metrics) -> Verdict:
         )
     reasons.append(f"scheduler_step_tokens count == step_scheduled events ({n_step_ev})")
 
+    # rule 7: prefix_reuse_hits_total <-> prefix_reuse events (engines
+    # without the radix index registered reconcile 0 == 0)
+    n_reuse_ev = len(log.named("prefix_reuse"))
+    n_reuse_m = sum(_counter_series(snap, "prefix_reuse_hits_total").values())
+    if n_reuse_m != n_reuse_ev:
+        return Verdict.fail(
+            f"prefix_reuse_hits_total {n_reuse_m} != prefix_reuse count {n_reuse_ev}"
+        )
+    reasons.append(f"prefix_reuse_hits_total == prefix_reuse events ({n_reuse_ev})")
+
+    # rule 8: cow_copies_total <-> page_cow events
+    n_cow_ev = len(log.named("page_cow"))
+    n_cow_m = sum(_counter_series(snap, "cow_copies_total").values())
+    if n_cow_m != n_cow_ev:
+        return Verdict.fail(
+            f"cow_copies_total {n_cow_m} != page_cow count {n_cow_ev}"
+        )
+    reasons.append(f"cow_copies_total == page_cow events ({n_cow_ev})")
+
     return Verdict(True, reasons)
+
+
+def check_shared_page_immutability(log: EventLog) -> Verdict:
+    """A shared page is never mutated in place.
+
+    Replays page-slot occupancy from the ordered witnesses:
+
+      - ``block_stored`` with a ``page_index`` occupies that slot for its
+        block (a slot still occupied by a DIFFERENT live block is an
+        aliasing violation);
+      - ``block_removed`` frees whatever slot its block held;
+      - ``page_extend`` is the ONLY legal in-place page mutation and must
+        carry ``refcount <= 1`` (the extender is the sole holder) and hit
+        the slot its own block occupies;
+      - ``page_cow`` must land the copy on a DIFFERENT slot than the
+        source (``new_page_index != page_index``).
+
+    Events without a page index (owned-array payloads) are outside the
+    page store and skipped.
+    """
+    slot_of: dict = {}  # block_id -> page_index
+    occupant: dict = {}  # page_index -> block_id
+    n_extends = n_cows = 0
+    for e in log.events:
+        if e.name == "block_stored":
+            bid = e.payload.get("block_id")
+            pi = e.payload.get("page_index")
+            old = slot_of.pop(bid, None)
+            if old is not None and occupant.get(old) == bid:
+                del occupant[old]  # re-store of a known block moves it
+            if pi is None:
+                continue
+            cur = occupant.get(pi)
+            if cur is not None and cur != bid:
+                return Verdict.fail(
+                    f"page {pi} stored for block {bid} while occupied by "
+                    f"live block {cur} (seq {e.seq})"
+                )
+            occupant[pi] = bid
+            slot_of[bid] = pi
+        elif e.name == "block_removed":
+            bid = e.payload.get("block_id")
+            pi = slot_of.pop(bid, None)
+            if pi is not None and occupant.get(pi) == bid:
+                del occupant[pi]
+        elif e.name == "page_extend":
+            n_extends += 1
+            ref = e.payload.get("refcount", 0)
+            if ref is not None and ref > 1:
+                return Verdict.fail(
+                    f"page_extend on block {e.payload.get('block_id')} with "
+                    f"refcount {ref} > 1 (shared page mutated, seq {e.seq})"
+                )
+            pi = e.payload.get("page_index")
+            bid = e.payload.get("block_id")
+            if pi is not None and occupant.get(pi) != bid:
+                return Verdict.fail(
+                    f"page_extend wrote slot {pi} not occupied by its block "
+                    f"{bid} (seq {e.seq})"
+                )
+        elif e.name == "page_cow":
+            n_cows += 1
+            pi = e.payload.get("page_index")
+            npi = e.payload.get("new_page_index")
+            if pi is not None and npi is not None and pi == npi:
+                return Verdict.fail(
+                    f"page_cow landed on its own source slot {pi} (seq {e.seq})"
+                )
+    return Verdict(
+        True,
+        [
+            f"page occupancy consistent over {len(log)} events "
+            f"({n_extends} extends, {n_cows} cows, {len(occupant)} slots live)"
+        ],
+    )
 
 
 # -- false-positive control checks (the analyzer must REJECT these) -----------

@@ -99,6 +99,17 @@ NATIVE_EVENTS = (
     # ordered witness event — the reconciliation invariant
     "stage_latency",
     "fail_closed_refused",
+    # pool-wide radix prefix sharing (serving/kv_cache.py, serving/engine.py):
+    # prefix_reuse marks ONE admission that found resident prefix pages
+    # (full blocks and/or a partial decode-tail block) — the ordered witness
+    # for prefix_reuse_hits_total; page_extend marks an in-place append to
+    # an UNSHARED partial page (refcount must be <= 1 — the analyzer's
+    # shared-page-immutability check rejects anything else); page_cow marks
+    # a copy-on-write at the divergence block of a SHARED page — the ordered
+    # witness for cow_copies_total
+    "prefix_reuse",
+    "page_extend",
+    "page_cow",
 )
 
 ALL_EVENT_NAMES = frozenset(E.values()) | frozenset(NATIVE_EVENTS)
@@ -179,6 +190,11 @@ PAYLOAD_SCHEMA: Dict[str, frozenset] = {
     "tier_quarantined": frozenset({"tier", "consecutive_failures", "trigger"}),
     "stage_latency": frozenset({"stage", "seconds"}),
     "fail_closed_refused": frozenset({"scope", "trigger", "reason"}),
+    "prefix_reuse": frozenset({"n_blocks", "n_tokens", "partial_tokens"}),
+    "page_extend": frozenset({"block_id", "page_index", "n_valid", "refcount"}),
+    "page_cow": frozenset(
+        {"block_id", "new_block_id", "page_index", "new_page_index", "refcount"}
+    ),
 }
 
 PAYLOAD_OPTIONAL: Dict[str, frozenset] = {
@@ -193,6 +209,10 @@ PAYLOAD_OPTIONAL: Dict[str, frozenset] = {
     "offload_request_finished_pending_jobs": frozenset({"job_id"}),
     # claim-registration placements carry the claim predicate.
     "route_placement": frozenset({"predicate"}),
+    # page-resident stores carry their slot so the shared-page-immutability
+    # replay (core/analyzer.py) can track occupancy; owned-array payloads
+    # (shape drift, dense snapshots) legally omit it.
+    "block_stored": frozenset({"page_index"}),
 }
 
 assert frozenset(PAYLOAD_SCHEMA) == ALL_EVENT_NAMES, "every event name needs a payload schema"

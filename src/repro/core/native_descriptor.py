@@ -83,27 +83,35 @@ def scenario_soft_priority(make_engine, trials: int = 5) -> Dict[str, Any]:
         for pfx in (pa, pb):
             eng.run(eng.submit(pfx, max_new_tokens=1))
         pre_loss = bool(eng.events.named("pressure_eviction"))
-        eng.scheduler.apply_pressure(2)
-        first = [e.claim_id for e in eng.events.named("pressure_eviction")[:2]]
+        # claimless decode-tail partials (priority 0, folded back into the
+        # radix pool at retirement) are lost before any claim-covered
+        # block; the priority obligation orders the CLAIM-covered losses
+        eng.scheduler.apply_pressure(4)
+        claimed = [
+            e.claim_id
+            for e in eng.events.named("pressure_eviction")
+            if e.claim_id is not None
+        ]
+        first = claimed[:2]
         return ca, cb, first, pre_loss
 
     original = swapped = equal = 0
     joinable = no_preloss = 0
     for _ in range(trials):
         ca, cb, first, pre = run_family(5, 1)
-        original += all(c == cb.claim_id for c in first)
+        original += first == [cb.claim_id, cb.claim_id]
         joinable += 1
         no_preloss += not pre
     for _ in range(trials):
         ca, cb, first, pre = run_family(1, 5)
-        swapped += all(c == ca.claim_id for c in first)
+        swapped += first == [ca.claim_id, ca.claim_id]
         joinable += 1
         no_preloss += not pre
     eq_trials = 3
     for _ in range(eq_trials):
         ca, cb, first, pre = run_family(3, 3)
         # equal priority: loss order follows insertion (LRU), not priority
-        equal += all(c == ca.claim_id for c in first)
+        equal += first == [ca.claim_id, ca.claim_id]
         joinable += 1
         no_preloss += not pre
     gates = {
@@ -158,7 +166,7 @@ def scenario_expiring(make_engine) -> Dict[str, Any]:
     eng = make_engine()
     claim = eng.accept_claim(PREFIX, ClaimMode.EXPIRING, duration_s=0.0)
     eng.run(eng.submit(PREFIX, max_new_tokens=1))
-    eng.scheduler.sweep_expiry()
+    eng._release_claim_blocks(eng.scheduler.sweep_expiry())
     expired = eng.events.named("resident_claim_expired")
     eng.scheduler.apply_pressure(2)
     evict = eng.events.named("pressure_eviction")

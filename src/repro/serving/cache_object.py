@@ -31,6 +31,9 @@ class KVChainKind:
 
     name = "kv_chain"
     observation_point = "prefill_complete"
+    # position-sliceable: any block-aligned prefix of a KV chain is a valid
+    # KV chain, so pages are shareable across requests via the radix index
+    shareable = True
 
     def object_id(self, prefix: Tuple[int, ...], block_size: int) -> str:
         return prefix_object_id(prefix, block_size)
@@ -54,6 +57,9 @@ class StateSnapshotKind:
 
     name = "state_snapshot"
     observation_point = "state_snapshot"
+    # a recurrent state summarizes its EXACT prefix — it cannot be sliced
+    # at a block boundary, so snapshots are never shared across requests
+    shareable = False
 
     def object_id(self, prefix: Tuple[int, ...], block_size: int) -> str:
         return prefix_object_id(prefix, 1)

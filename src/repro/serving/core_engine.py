@@ -629,6 +629,31 @@ class EngineCore:
         return state
 
     # ---------------------------------------------------------------- terminal
+    def _release_claim_blocks(self, claims) -> None:
+        """Claim-scoped release of pool residency after expiry.
+
+        A shared page carries the union of its sharers' claim ids; the end
+        of ONE claim's lifetime (TTL expiry, `claim_expired_boundary`) only
+        removes THAT claim's membership and priority boost — it never
+        invalidates the bytes a live sharer's accepted obligation still
+        covers.  The block itself stays resident and becomes an ordinary
+        eviction candidate once the last protecting claim is gone."""
+        gone = {c.claim_id for c in claims}
+        if not gone:
+            return
+        for blk in self.pool.blocks.values():
+            if not (blk.claim_ids & gone):
+                continue
+            blk.claim_ids -= gone
+            blk.priority = max(
+                (
+                    self.registry.maybe_get(c).priority
+                    for c in blk.claim_ids
+                    if self.registry.maybe_get(c) is not None
+                ),
+                default=0,
+            )
+
     def _finish_ok(self, req: Request) -> Request:
         req.status = "finished"
         self.events.emit(

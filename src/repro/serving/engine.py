@@ -160,6 +160,7 @@ class ServingEngine(EngineCore):
         fault_plan=None,
         retry_policy=None,
         quarantine_after: Optional[int] = 3,
+        prefix_sharing: bool = True,
     ):
         super().__init__(
             bundle,
@@ -216,8 +217,42 @@ class ServingEngine(EngineCore):
             "decode_stall_steps_total",
             "scheduler steps where live decode rows did NOT launch (must stay 0)",
         )
+        # pool-wide radix prefix sharing.  Gated on the cache-object kind:
+        # a KV chain is position-sliceable, so any block-aligned prefix of
+        # it is reusable by any request; a recurrent state snapshot
+        # summarizes its exact prefix and is not (shareable = False).
+        # prefix_sharing=False salts every chain with the request id —
+        # request-private chains, the measured no-sharing baseline of
+        # benchmarks/bench_radix.py.
+        self.prefix_sharing = bool(
+            prefix_sharing and getattr(self.kind, "shareable", False)
+        )
+        self.prefix_reuse_hits = self.metrics.counter(
+            "prefix_reuse_hits_total",
+            "admissions that found resident prefix pages (radix hit)",
+        )
+        self.cow_copies = self.metrics.counter(
+            "cow_copies_total",
+            "copy-on-write page copies at shared-page divergence points",
+        )
+        self.pages_shared = self.metrics.gauge(
+            "pages_shared",
+            "device pages currently referenced by more than one holder",
+        )
+        # the pool invokes this once per page_cow emit (metric witness 1:1)
+        self.pool.on_cow = self.cow_copies.inc
 
     # ------------------------------------------------------------------ claims
+    def _chain_root(self, req: Request) -> str:
+        """Root hash for a request's block chains.  Sharing ON -> "" (the
+        pool-wide radix root: content-equal prefixes collide on the same
+        chain hashes and reuse each other's pages).  Sharing OFF -> a
+        per-request salt, making every chain request-private.  Claims bind
+        to root-"" chains (``_claims_covering_block`` walks from ""), so
+        claim offload/restore requires sharing on; the salted mode exists
+        as the measured no-sharing baseline."""
+        return "" if self.prefix_sharing else "!" + req.request_id
+
     def _claims_covering_block(self, chain: str, block_index: int) -> Set[str]:
         """Claim ids whose prefix includes the block at this chain position."""
         out = set()
@@ -321,7 +356,7 @@ class ServingEngine(EngineCore):
         accumulated chain).
         """
         chain: List[KVBlock] = []
-        h = ""
+        h = self._chain_root(req)
         protected = self.scheduler.protected_claim_ids()
         ck = np.asarray(ck)
         cv = np.asarray(cv)
@@ -329,12 +364,13 @@ class ServingEngine(EngineCore):
             for bi in range(upto // self.block_size):
                 lo, hi = bi * self.block_size, (bi + 1) * self.block_size
                 btoks = req.tokens[lo:hi]
-                h = chain_hash(h, btoks)
+                parent, h = h, chain_hash(h, btoks)
                 if lo < start:
                     continue
                 bid = self.pool.prefix_index.get(h)
-                if bid is not None:  # already resident (shared prefix)
-                    blk = self.pool.blocks[bid]
+                blk = self.pool.blocks.get(bid) if bid is not None else None
+                if blk is not None and blk.chain == h and not blk.partial:
+                    pass  # already resident (shared prefix)
                 else:
                     claim_ids = self._claims_covering_block(h, bi)
                     prio = max(
@@ -350,6 +386,7 @@ class ServingEngine(EngineCore):
                         priority=prio,
                         claim_ids=claim_ids,
                         protected_claims=protected,
+                        parent=parent,
                     )
                 if pin:
                     pin_chain((blk,))
@@ -358,6 +395,126 @@ class ServingEngine(EngineCore):
             unpin_chain(chain)
             raise
         return chain
+
+    def _fold_sequence_blocks(
+        self,
+        req: Request,
+        seq: Sequence[int],
+        tail_k: np.ndarray,
+        tail_v: np.ndarray,
+        plen: int,
+        *,
+        held_blocks: Sequence[KVBlock] = (),
+        trailing_partial: bool = False,
+        best_effort: bool = False,
+    ) -> None:
+        """Fold a request's computed KV back into pool pages along its
+        radix path.
+
+        ``seq`` is the request's token sequence (prompt, optionally plus
+        generated output); ``tail_k``/``tail_v`` ([L, T, KV, Dh] numpy)
+        hold the KV computed through the in-flight tail for positions
+        ``plen..plen+T``.  Resident full blocks are skipped (radix
+        descent); a matching partial block is EXTENDED — in place while
+        this caller is its only holder (``held_blocks``), copy-on-write
+        once shared; missing blocks are cut from the tail.  With
+        ``trailing_partial`` the sub-block remainder is folded too, so
+        decode tails become reusable prefix.  ``best_effort`` (retirement
+        readmission) never evicts and never raises: it stops at the first
+        allocation that would need a page the pool doesn't have free —
+        readmitted blocks are an opportunistic cache fill, not an
+        obligation anyone accepted.
+        """
+        bs = self.block_size
+        tail_len = int(tail_k.shape[1]) if tail_k is not None else 0
+        protected = self.scheduler.protected_claim_ids()
+        held_ids = {id(b) for b in held_blocks}
+        h = self._chain_root(req)
+        seq = tuple(int(t) for t in seq)
+        upto = len(seq) if trailing_partial else len(seq) - len(seq) % bs
+        bi = 0
+        lo = 0
+        while lo < upto:
+            hi = min(lo + bs, upto)
+            btoks = seq[lo:hi]
+            parent, h = h, chain_hash(h, btoks)
+            is_full = hi - lo == bs
+            bid = self.pool.prefix_index.get(h) if is_full else None
+            blk = self.pool.blocks.get(bid) if bid is not None else None
+            if blk is not None and blk.chain == h and not blk.partial:
+                bi += 1
+                lo = hi
+                continue
+            claim_ids = self._claims_covering_block(h, bi) if is_full else set()
+            prio = max(
+                [self.registry.get(c).priority for c in claim_ids], default=0
+            )
+            pb = self.pool.lookup_partial(parent, btoks)
+            if pb is not None and len(pb.tokens) == len(btoks):
+                return  # identical partial already resident (remainder)
+            if pb is not None:
+                ext_lo = lo + len(pb.tokens)
+                if ext_lo < plen or hi - plen > tail_len:
+                    return  # extension KV not covered by this tail
+                held = 1 if id(pb) in held_ids else 0
+                if best_effort and pb.ref > held and self.pool.free_slots <= 0:
+                    return  # COW would need a page; never evict here
+                self.pool.extend_block(
+                    pb,
+                    seq[ext_lo:hi],
+                    tail_k[:, ext_lo - plen : hi - plen],
+                    tail_v[:, ext_lo - plen : hi - plen],
+                    block_size=bs,
+                    held=held,
+                    priority=prio,
+                    claim_ids=claim_ids,
+                    protected_claims=protected,
+                )
+            else:
+                if lo < plen or hi - plen > tail_len:
+                    return  # KV for these positions not covered by this tail
+                if best_effort and self.pool.free_slots <= 0:
+                    return
+                ks = tail_k[:, lo - plen : hi - plen]
+                vs = tail_v[:, lo - plen : hi - plen]
+                pos = np.arange(lo, hi)
+                if is_full:
+                    self.pool.add_block(
+                        btoks, h, ks, vs, pos,
+                        priority=prio, claim_ids=claim_ids,
+                        protected_claims=protected, parent=parent,
+                    )
+                else:
+                    self.pool.add_partial_block(
+                        btoks, parent, ks, vs, pos,
+                        block_size=bs, priority=prio,
+                        protected_claims=protected,
+                    )
+            bi += 1
+            lo = hi
+
+    def _readmit_decode_tail(
+        self,
+        req: Request,
+        blocks: Sequence[KVBlock],
+        plen: int,
+        tail_k: np.ndarray,
+        tail_v: np.ndarray,
+    ) -> None:
+        """Fold a finished request's decode tail back into the page store:
+        generated tokens become reusable prefix for ANY later request (the
+        next turn of the same conversation descends onto them like any
+        other radix path).  Best-effort by design — readmitted blocks
+        arrive unpinned and claimless (claims bind at prefill observation
+        points, never retroactively), so they are ordinary eviction
+        victims and a full pool skips readmission rather than evict."""
+        if not (self.prefix_sharing and self.decode_mode == "paged"):
+            return
+        seq = tuple(req.tokens) + tuple(int(t) for t in req.output_tokens)
+        self._fold_sequence_blocks(
+            req, seq, tail_k, tail_v, plen,
+            held_blocks=blocks, trailing_partial=True, best_effort=True,
+        )
 
     def _materialize_claims(self, req: Request, materialized_tokens: int) -> None:
         """Named observation point: prefill_complete."""
@@ -440,8 +597,10 @@ class ServingEngine(EngineCore):
             )
             return None
 
-        # --- device-resident prefix reuse (event-free index walk) ---
-        dev_blocks = self.pool.lookup_prefix(req.tokens, self.block_size)
+        # --- device-resident prefix reuse (radix descent from this
+        # request's chain root) ---
+        root = self._chain_root(req)
+        dev_blocks = self.pool.lookup_prefix(req.tokens, self.block_size, root=root)
 
         # --- explicit active/resident conflict action (admission) ---
         if self.decode_mode == "paged":
@@ -469,14 +628,40 @@ class ServingEngine(EngineCore):
             self.block_size,
             req.request_id,
             skip_blocks=len(dev_blocks),
-            start_chain=dev_blocks[-1].chain if dev_blocks else "",
+            start_chain=dev_blocks[-1].chain if dev_blocks else root,
         )
         if hit_blocks:
             if not self._restore_for_request(req, hit_blocks):
                 return None
-            dev_blocks = self.pool.lookup_prefix(req.tokens, self.block_size)
+            dev_blocks = self.pool.lookup_prefix(
+                req.tokens, self.block_size, root=root
+            )
+
+        # --- sub-block (decode-tail) reuse: the longest partial child under
+        # the full-block hit.  Paged only — the partial page relies on
+        # prefix_len masking past its valid length; dense assembly needs
+        # contiguous full payloads. ---
+        partial_tokens = 0
+        if self.decode_mode == "paged":
+            covered = len(dev_blocks) * self.block_size
+            pb = self.pool.lookup_partial(
+                dev_blocks[-1].chain if dev_blocks else root,
+                req.tokens[covered:],
+            )
+            if pb is not None:
+                partial_tokens = len(pb.tokens)
+                dev_blocks = dev_blocks + [pb]
 
         req.cached_tokens = sum(len(b.tokens) for b in dev_blocks)
+        if self.prefix_sharing and req.cached_tokens:
+            self.events.emit(
+                "prefix_reuse",
+                request_id=req.request_id,
+                n_blocks=len(dev_blocks),
+                n_tokens=req.cached_tokens,
+                partial_tokens=partial_tokens,
+            )
+            self.prefix_reuse_hits.inc()
         return dev_blocks
 
     # ------------------------------------------------------------- paged phase
@@ -582,17 +767,12 @@ class ServingEngine(EngineCore):
             tail_v = np.asarray(state["v_tail"])[:, 0, :t_used]
             tail_pos = np.arange(plen, n)
             if cached < n:
-                # freshly computed full blocks become reusable pool pages
-                nb_new = n // self.block_size - cached // self.block_size
-                if nb_new > 0:
-                    lo = cached // self.block_size * self.block_size
-                    # tail slots for positions lo..: (position - plen)
-                    ks = tail_k[:, lo - plen : lo - plen + nb_new * self.block_size]
-                    vs = tail_v[:, lo - plen : lo - plen + nb_new * self.block_size]
-                    self._store_prefix_blocks(
-                        req, ks, vs, lo + nb_new * self.block_size,
-                        start=lo, pin=False,
-                    )
+                # freshly computed KV folds back into pool pages along the
+                # radix path: full blocks are cut from the tail, and a
+                # matched partial block grows in place (or COWs if shared)
+                self._fold_sequence_blocks(
+                    req, toks, tail_k, tail_v, plen, held_blocks=blocks
+                )
             # the named observation point applies to exact-prefix hits too:
             # a claim accepted after its prefix became resident must still
             # materialize here (matching the dense path)
@@ -909,8 +1089,10 @@ class ServingEngine(EngineCore):
         non-terminal.
         """
         reqs = list(reqs)
-        # --- expiry boundary sweep precedes scheduling ---
-        self.scheduler.sweep_expiry()
+        # --- expiry boundary sweep precedes scheduling; an expired claim's
+        # blocks lose that claim's membership (and its priority boost) but
+        # stay resident for their remaining sharers ---
+        self._release_claim_blocks(self.scheduler.sweep_expiry())
         # uniform for EVERY batch size (including 1): span tracing and
         # metrics reconciliation never special-case singletons
         self.events.emit(

@@ -49,6 +49,15 @@ class KVBlock:
     claim_ids: Set[str] = field(default_factory=set)
     last_use: float = 0.0
     page_index: Optional[int] = None  # slot in the device page store, if paged
+    # radix sharing: parent chain hash ("" at the root) and whether the block
+    # holds fewer than block_size valid tokens (a decode tail awaiting
+    # extension).  Partial blocks are indexed in BlockPool.partial_children,
+    # never in prefix_index; their payload is zero-padded to block_size so
+    # they occupy normal page slots (decode masks positions beyond the valid
+    # length via prefix_len), while ``tokens`` keeps only the valid tokens so
+    # footprint arithmetic (sum(len(b.tokens))) stays exact.
+    parent: str = ""
+    partial: bool = False
     _released_nbytes: int = 0  # payload size while spilled (k/v are None)
     # content checksum written at first spill, verified at restore, cleared
     # on verified readmit (chaos.payload_checksum) — None while device-resident
@@ -137,8 +146,19 @@ class BlockPool:
         self._clock = clock
         self.blocks: Dict[int, KVBlock] = {}
         self._next_id = 0
-        # chain hash -> block_id for device-resident reusable blocks
+        # chain hash -> block_id for device-resident reusable FULL blocks.
+        # Together with partial_children this is the pool-wide radix index:
+        # every chain hash folds its parent hash, so the mapping is exactly
+        # a radix tree over block-granular token paths — walking a prompt
+        # block-by-block (lookup_prefix) descends the tree, and any two
+        # requests sharing a token prefix converge on the same block ids.
         self.prefix_index: Dict[str, int] = {}
+        # parent chain hash -> partial (sub-block) children: decode tails
+        # readmitted at request end, grown in place via extend_block while
+        # unshared and copy-on-written at the divergence point once shared
+        self.partial_children: Dict[str, List[int]] = {}
+        # engine hook invoked once per page_cow emit (metric witness 1:1)
+        self.on_cow = None
         # paged backing store (lazily shaped from the first block payload)
         self.k_pages: Optional[np.ndarray] = None  # [L, KV, N, page, Dh]
         self.v_pages: Optional[np.ndarray] = None
@@ -226,6 +246,7 @@ class BlockPool:
         claim_ids: Optional[Set[str]] = None,
         protected_claims: Optional[Set[str]] = None,
         evictable_cb=None,
+        parent: str = "",
     ) -> KVBlock:
         if self.free_slots <= 0:
             self.evict(1, protected_claims=protected_claims or set(), evictable_cb=evictable_cb)
@@ -239,6 +260,7 @@ class BlockPool:
             priority=priority,
             claim_ids=set(claim_ids or ()),
             last_use=self._clock(),
+            parent=parent,
         )
         k, v = np.asarray(k), np.asarray(v)
         if self._pageable(k, v):
@@ -248,7 +270,179 @@ class BlockPool:
         self._next_id += 1
         self.blocks[blk.block_id] = blk
         self.prefix_index[chain] = blk.block_id
-        self._events.emit("block_stored", block_id=blk.block_id, chain=chain, n_tokens=len(tokens))
+        self._events.emit(
+            "block_stored",
+            block_id=blk.block_id,
+            chain=chain,
+            n_tokens=len(tokens),
+            page_index=blk.page_index,
+        )
+        return blk
+
+    def add_partial_block(
+        self,
+        tokens: Sequence[int],
+        parent: str,
+        k: np.ndarray,
+        v: np.ndarray,
+        positions: np.ndarray,
+        *,
+        block_size: int,
+        priority: int = 0,
+        claim_ids: Optional[Set[str]] = None,
+        protected_claims: Optional[Set[str]] = None,
+        evictable_cb=None,
+    ) -> KVBlock:
+        """Store a sub-block decode tail as a first-class pool block.
+
+        The payload is zero-padded to ``block_size`` so it occupies a
+        normal page slot; ``tokens`` keeps only the valid tokens.  Partial
+        blocks hang off their parent chain in ``partial_children`` — never
+        in ``prefix_index`` — and grow via ``extend_block``."""
+        toks = tuple(int(t) for t in tokens)
+        if not 0 < len(toks) < block_size:
+            raise ValueError("partial block must hold 1..block_size-1 tokens")
+        if self.free_slots <= 0:
+            self.evict(1, protected_claims=protected_claims or set(), evictable_cb=evictable_cb)
+        k, v = np.asarray(k), np.asarray(v)
+        if self._pageable(k, v) and k.shape[1] < block_size:
+            L, n, KV, Dh = k.shape
+            pk = np.zeros((L, block_size, KV, Dh), k.dtype)
+            pv = np.zeros_like(pk)
+            pk[:, :n] = k
+            pv[:, :n] = v
+            k, v = pk, pv
+        blk = KVBlock(
+            block_id=self._next_id,
+            tokens=toks,
+            chain=chain_hash(parent, toks),
+            k=None,
+            v=None,
+            positions=np.asarray(positions),
+            priority=priority,
+            claim_ids=set(claim_ids or ()),
+            last_use=self._clock(),
+            parent=parent,
+            partial=True,
+        )
+        if self._pageable(k, v):
+            self._page_in(blk, k, v)
+        else:
+            blk.k, blk.v = k, v
+        self._next_id += 1
+        self.blocks[blk.block_id] = blk
+        self.partial_children.setdefault(parent, []).append(blk.block_id)
+        self._events.emit(
+            "block_stored",
+            block_id=blk.block_id,
+            chain=blk.chain,
+            n_tokens=len(toks),
+            page_index=blk.page_index,
+        )
+        return blk
+
+    def extend_block(
+        self,
+        blk: KVBlock,
+        new_tokens: Sequence[int],
+        k_ext: np.ndarray,
+        v_ext: np.ndarray,
+        *,
+        block_size: int,
+        held: int = 0,
+        priority: int = 0,
+        claim_ids: Optional[Set[str]] = None,
+        protected_claims: Optional[Set[str]] = None,
+        evictable_cb=None,
+    ) -> KVBlock:
+        """Append tokens to a partial block; returns the block holding the
+        extended content.
+
+        Unshared (ref <= ``held``, the caller's own pins): the page is
+        extended IN PLACE — the only legal page mutation, witnessed by a
+        ``page_extend`` event the analyzer rejects at refcount > 1.
+        Shared: copy-on-write at the divergence point — the sharers keep
+        the original page byte-identical; the extension lands on a fresh
+        block/page (``page_cow``).  Full blocks never need COW at all:
+        chains are content-addressed, so a diverging full block is simply a
+        different chain hash and a different page."""
+        if not blk.partial:
+            raise ValueError(f"block {blk.block_id} is not partial")
+        new_toks = tuple(int(t) for t in new_tokens)
+        n0, e = len(blk.tokens), len(new_toks)
+        if e == 0:
+            return blk
+        if n0 + e > block_size:
+            raise ValueError("extension overflows block_size")
+        k_ext, v_ext = np.asarray(k_ext), np.asarray(v_ext)
+        toks = blk.tokens + new_toks
+        chain = chain_hash(blk.parent, toks)
+        full = n0 + e == block_size
+        p0 = int(blk.positions[0]) if len(blk.positions) else 0
+        if blk.ref > held:
+            # shared: copy the base payload BEFORE any allocation below —
+            # eviction inside add could otherwise free the source page
+            base_k = np.array(blk.k[:, :n0])
+            base_v = np.array(blk.v[:, :n0])
+            cow_k = np.concatenate([base_k, k_ext], axis=1)
+            cow_v = np.concatenate([base_v, v_ext], axis=1)
+            positions = np.arange(p0, p0 + n0 + e)
+            if full:
+                nb = self.add_block(
+                    toks, chain, cow_k, cow_v, positions,
+                    priority=priority, claim_ids=claim_ids,
+                    protected_claims=protected_claims,
+                    evictable_cb=evictable_cb, parent=blk.parent,
+                )
+            else:
+                nb = self.add_partial_block(
+                    toks, blk.parent, cow_k, cow_v, positions,
+                    block_size=block_size, priority=priority,
+                    claim_ids=claim_ids, protected_claims=protected_claims,
+                    evictable_cb=evictable_cb,
+                )
+            self._events.emit(
+                "page_cow",
+                block_id=blk.block_id,
+                new_block_id=nb.block_id,
+                page_index=blk.page_index,
+                new_page_index=nb.page_index,
+                refcount=blk.ref,
+            )
+            if self.on_cow is not None:
+                self.on_cow()
+            return nb
+        # unshared: in-place append into the zero-padded region
+        blk.k[:, n0 : n0 + e] = k_ext
+        blk.v[:, n0 : n0 + e] = v_ext
+        blk.tokens = toks
+        blk.chain = chain
+        blk.positions = np.arange(p0, p0 + n0 + e)
+        blk.last_use = self._clock()
+        if claim_ids:
+            blk.claim_ids |= set(claim_ids)
+        blk.priority = max(blk.priority, priority)
+        if full:
+            kids = self.partial_children.get(blk.parent)
+            if kids and blk.block_id in kids:
+                kids.remove(blk.block_id)
+                if not kids:
+                    del self.partial_children[blk.parent]
+            blk.partial = False
+            cur = self.prefix_index.get(chain)
+            cur_blk = self.blocks.get(cur) if cur is not None else None
+            if cur_blk is None or cur_blk.chain != chain or cur_blk.partial:
+                self.prefix_index[chain] = blk.block_id
+        if blk.page_index is not None:
+            self._pages_version += 1
+            self._dirty_pages.add(blk.page_index)
+        self._events.emit(
+            "page_extend",
+            block_id=blk.block_id,
+            page_index=blk.page_index,
+            n_valid=n0 + e,
+            refcount=blk.ref,
+        )
         return blk
 
     def readmit(self, blk: KVBlock) -> KVBlock:
@@ -261,31 +455,115 @@ class BlockPool:
         if self._pageable(k, v):
             self._page_in(blk, np.asarray(k), np.asarray(v))
         self.blocks[blk.block_id] = blk
-        self.prefix_index[blk.chain] = blk.block_id
+        if blk.partial:
+            kids = self.partial_children.setdefault(blk.parent, [])
+            if blk.block_id not in kids:
+                kids.append(blk.block_id)
+        else:
+            # first resident wins: only (re)claim the index entry when no
+            # LIVE holder of this chain exists.  Blindly overwriting would
+            # orphan the index the moment the readmitted twin is freed —
+            # the entry would then resolve a hash to a dead block id (and,
+            # transitively, to whatever reuses its page slot).
+            cur = self.prefix_index.get(blk.chain)
+            cur_blk = self.blocks.get(cur) if cur is not None else None
+            if cur_blk is None or cur_blk.chain != blk.chain or cur_blk.partial:
+                self.prefix_index[blk.chain] = blk.block_id
         return blk
 
     def remove(self, block_id: int, reason: str = "evicted") -> KVBlock:
         blk = self.blocks.pop(block_id)
         self._page_out(blk)
-        if self.prefix_index.get(blk.chain) == block_id:
+        if blk.partial:
+            kids = self.partial_children.get(blk.parent)
+            if kids and block_id in kids:
+                kids.remove(block_id)
+                if not kids:
+                    del self.partial_children[blk.parent]
+        elif self.prefix_index.get(blk.chain) == block_id:
             del self.prefix_index[blk.chain]
         self._events.emit("block_removed", block_id=block_id, chain=blk.chain, reason=reason)
         return blk
 
     # -- lookup ---------------------------------------------------------------
-    def lookup_prefix(self, tokens: Sequence[int], block_size: int) -> List[KVBlock]:
-        """Longest chain of resident blocks matching the leading prefix."""
+    def lookup_prefix(
+        self, tokens: Sequence[int], block_size: int, *, root: str = ""
+    ) -> List[KVBlock]:
+        """Longest chain of resident blocks matching the leading prefix
+        (a radix descent from ``root``).  Every hit is re-verified against
+        the live block's chain: a stale index entry — a hash left pointing
+        at a freed id, or an id whose slot was reused by different content
+        — terminates the walk instead of resolving to foreign bytes."""
         out: List[KVBlock] = []
-        h = ""
+        h = root
         for i in range(0, len(tokens) - len(tokens) % block_size, block_size):
             h = chain_hash(h, tokens[i : i + block_size])
             bid = self.prefix_index.get(h)
             if bid is None:
                 break
-            blk = self.blocks[bid]
+            blk = self.blocks.get(bid)
+            if blk is None or blk.chain != h or blk.partial:
+                break
             blk.last_use = self._clock()
             out.append(blk)
         return out
+
+    def lookup_partial(self, parent: str, tokens: Sequence[int]) -> Optional[KVBlock]:
+        """Longest device-resident partial child of ``parent`` whose valid
+        tokens are a leading prefix of ``tokens`` (diverged or stale
+        children are skipped; the chain is re-verified from content)."""
+        toks = tuple(int(t) for t in tokens)
+        best: Optional[KVBlock] = None
+        for bid in list(self.partial_children.get(parent, ())):
+            blk = self.blocks.get(bid)
+            if blk is None or not blk.partial or blk.location != "device":
+                continue
+            n = len(blk.tokens)
+            if n > len(toks) or blk.tokens != toks[:n]:
+                continue
+            if blk.chain != chain_hash(parent, blk.tokens):
+                continue
+            if best is None or n > len(best.tokens):
+                best = blk
+        if best is not None:
+            best.last_use = self._clock()
+        return best
+
+    def shared_page_count(self) -> int:
+        """Device blocks currently referenced by more than one holder."""
+        return sum(
+            1 for b in self.blocks.values() if b.location == "device" and b.ref > 1
+        )
+
+    def assert_consistent(self) -> None:
+        """Radix bookkeeping invariants (test/property-suite hook):
+        prefix_index maps only to live full chain-matching blocks,
+        partial_children only to live children whose chain re-derives from
+        (parent, tokens), no two live blocks alias a page slot, page
+        accounting balances, and no refcount is negative."""
+        for h, bid in self.prefix_index.items():
+            blk = self.blocks.get(bid)
+            assert blk is not None, f"prefix_index[{h!r}] -> dead block {bid}"
+            assert not blk.partial, f"prefix_index[{h!r}] -> partial block {bid}"
+            assert blk.chain == h, f"prefix_index[{h!r}] -> chain {blk.chain!r}"
+        for parent, kids in self.partial_children.items():
+            assert kids, f"partial_children[{parent!r}] is empty"
+            for bid in kids:
+                blk = self.blocks.get(bid)
+                assert blk is not None, f"partial_children[{parent!r}] -> dead {bid}"
+                assert blk.partial and blk.parent == parent
+                assert blk.chain == chain_hash(parent, blk.tokens)
+        pages: Dict[int, int] = {}
+        for bid, blk in self.blocks.items():
+            assert blk.block_id == bid
+            assert blk.ref >= 0, f"block {bid} has negative ref {blk.ref}"
+            if blk.page_index is not None:
+                other = pages.get(blk.page_index)
+                assert other is None, f"page {blk.page_index} aliased by {other} and {bid}"
+                pages[blk.page_index] = bid
+        if self.k_pages is not None:
+            assert not (set(self._free_pages) & set(pages)), "free page in use"
+            assert len(self._free_pages) + len(pages) == self.capacity
 
     # -- eviction ---------------------------------------------------------------
     def victim_candidates(self, protected_claims: Set[str], evictable_cb=None) -> List[KVBlock]:

@@ -467,6 +467,7 @@ class OffloadingConnector:
                     block_id=blk.block_id,
                     chain=blk.chain,
                     n_tokens=len(blk.tokens),
+                    page_index=blk.page_index,
                 )
             # per-tier health: failure for tiers with failing blocks,
             # success for tiers whose blocks ALL made it
@@ -483,17 +484,25 @@ class OffloadingConnector:
         self, job: OffloadJob, blk: KVBlock, direction: str, res: TransferResult
     ) -> None:
         """Per-block load failure: E4(ok=False) + E11, job attribution.
-        The failed bytes never reach the device pool — the KV is absent."""
+        The failed bytes never reach the device pool — the KV is absent.
+
+        A block can be covered by SEVERAL claims (a radix-shared page under
+        nested claim prefixes): every covering claim gets its OWN E11, so
+        each sharer's E12 has same-claim affected-block evidence in its own
+        ordered stream — one shared event would leave the other sharers'
+        fail-closed outcomes unattributed."""
         job.ok = False
         self._record_job_failure(job, res)
         self._emit_transfer_finished(job, blk.block_id, direction, False, res.reason)
-        self._events.emit(
-            "offload_worker_load_failed",
-            request_id=job.request_id,
-            claim_id=job.claim_id,
-            block_id=blk.block_id,
-            reason=res.reason,
-        )
+        affected = sorted(set(blk.claim_ids) | ({job.claim_id} if job.claim_id else set()))
+        for cid in affected or [None]:
+            self._events.emit(
+                "offload_worker_load_failed",
+                request_id=job.request_id,
+                claim_id=cid,
+                block_id=blk.block_id,
+                reason=res.reason,
+            )
 
     @staticmethod
     def _record_job_failure(job: OffloadJob, res: TransferResult) -> None:
@@ -563,13 +572,21 @@ class OffloadingConnector:
         self._record_job_failure(job, TransferResult(False, reason, trigger=trigger))
         self._emit_transfer_finished(job, block_id, direction or "", False, reason)
         if job.kind == "load":
-            self._events.emit(
-                "offload_worker_load_failed",
-                request_id=job.request_id,
-                claim_id=job.claim_id,
-                block_id=block_id,
-                reason=reason,
-            )
+            # same per-sharer attribution as _fail_load_block: the faulted
+            # block may be covered by several claims (radix-shared page)
+            tier = self.tiers.tier_of_block(block_id) if block_id is not None else None
+            blk = tier.blocks.get(block_id) if tier is not None else None
+            covering = set(blk.claim_ids) if blk is not None else set()
+            if job.claim_id:
+                covering.add(job.claim_id)
+            for cid in sorted(covering) or [None]:
+                self._events.emit(
+                    "offload_worker_load_failed",
+                    request_id=job.request_id,
+                    claim_id=cid,
+                    block_id=block_id,
+                    reason=reason,
+                )
         if direction and job.kind == "load":
             self._record_tier_failure(job, direction.split("_to_")[0])
         job.done = True

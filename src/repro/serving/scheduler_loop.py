@@ -573,17 +573,14 @@ class StepLoop:
         bs = eng.block_size
         try:
             if row.cached < n:
-                # freshly computed full blocks become reusable pool pages
-                nb_new = n // bs - row.cached // bs
-                if nb_new > 0:
-                    lo = row.cached // bs * bs
-                    tk = np.asarray(self._state["k_tail"])[:, idx]
-                    tv = np.asarray(self._state["v_tail"])[:, idx]
-                    ks = tk[:, lo - row.plen : lo - row.plen + nb_new * bs]
-                    vs = tv[:, lo - row.plen : lo - row.plen + nb_new * bs]
-                    eng._store_prefix_blocks(
-                        req, ks, vs, lo + nb_new * bs, start=lo, pin=False
-                    )
+                # freshly computed KV folds back into pool pages along the
+                # radix path: full blocks are cut from the tail, a matched
+                # partial block grows in place (or COWs if shared)
+                tk = np.asarray(self._state["k_tail"])[:, idx]
+                tv = np.asarray(self._state["v_tail"])[:, idx]
+                eng._fold_sequence_blocks(
+                    req, req.tokens, tk, tv, row.plen, held_blocks=row.blocks
+                )
             # the named observation point applies to exact-prefix hits too
             eng._materialize_claims(req, n - n % bs)
         except PoolExhausted as e:
@@ -599,6 +596,17 @@ class StepLoop:
             self.rows.remove(row)
 
     def _retire(self, row: Row) -> None:
+        # fold the finished row's decode tail back into pool pages BEFORE
+        # the unpin: generated tokens become reusable radix prefix for any
+        # later request (best-effort — a full pool skips it).  Only
+        # possible while the row's tail still sits in the batched state.
+        if self._state is not None and row in self._members:
+            idx = self._members.index(row)
+            t = row.pos - row.plen
+            if t > 0:
+                tk = np.asarray(self._state["k_tail"])[:, idx, :t]
+                tv = np.asarray(self._state["v_tail"])[:, idx, :t]
+                self.eng._readmit_decode_tail(row.req, row.blocks, row.plen, tk, tv)
         unpin_chain(row.blocks)
         self.eng._finish_ok(row.req)
         self.rows.remove(row)
@@ -659,3 +667,5 @@ class StepLoop:
                     budget=budget,
                 )
                 self.step_idx += 1
+            # point-in-time sharing gauge (reconcile-exempt by nature)
+            eng.pages_shared.set(eng.pool.shared_page_count())

@@ -229,7 +229,7 @@ class SnapshotEngine(EngineCore):
         token position for all survivors — recurrent states stacked on the
         batch axis through the SAME ragged greedy loop as the KV engine
         (EngineCore._greedy_decode_loop)."""
-        self.scheduler.sweep_expiry()
+        self._release_claim_blocks(self.scheduler.sweep_expiry())
         reqs = [
             self._new_request(tuple(int(t) for t in toks), max_new_tokens)
             for toks in token_seqs

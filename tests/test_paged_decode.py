@@ -113,8 +113,9 @@ def test_shared_prefix_occupies_pages_once(bp):
     reqs = [eng.submit(shared + (600 + i,) * 4, max_new_tokens=2) for i in range(6)]
     eng.run_batch(reqs)
     assert all(r.status == "finished" for r in reqs)
-    # 4 shared blocks + 6 distinct suffix blocks — NOT 6 x 5
-    assert eng.pool.used == 4 + 6
+    # 4 shared blocks + 6 distinct suffix blocks — NOT 6 x 5 — plus the 6
+    # readmitted decode-tail partials (2 generated tokens each)
+    assert eng.pool.used == 4 + 6 + 6
 
 
 # ----------------------------------------------------- beyond-dense context

@@ -1,0 +1,368 @@
+"""Property suite for the radix BlockPool.
+
+Random interleavings of insert / lookup / pin / unpin / evict / COW-write /
+offload-readmit against the pool-wide radix index must preserve:
+
+  - refcount balance: every pin the harness holds is the ONLY source of
+    refs, and a pinned block is never evicted or removed;
+  - COW isolation: extending a shared partial block never mutates the
+    sharer's tokens or bytes, and the copy lands on a different page slot
+    (no aliasing across diverged chains);
+  - index consistency: ``prefix_index``/``partial_children`` entries always
+    resolve to live chain-matching blocks (``BlockPool.assert_consistent``),
+    and the event log replays clean through the analyzer's
+    shared-page-immutability check.
+
+The operations live in ``RadixOps`` and are driven two ways: a hypothesis
+``RuleBasedStateMachine`` (collected only when hypothesis is installed,
+mirroring tests/test_hypothesis_properties.py) and an always-on seeded
+deterministic driver, so the properties run in environments without
+hypothesis.  The deterministic regression tests at the bottom are the
+shrunk corpus for the ``prefix_index`` staleness bug class
+(readmit-overwrite / free paths) fixed alongside this suite.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import settings
+    from hypothesis import strategies as st
+    from hypothesis.stateful import (
+        RuleBasedStateMachine,
+        invariant,
+        precondition,
+        rule,
+    )
+
+    HAS_HYPOTHESIS = True
+except ImportError:  # deterministic driver still runs
+    HAS_HYPOTHESIS = False
+
+from repro.core.analyzer import check_shared_page_immutability
+from repro.core.events import EventLog
+from repro.serving.kv_cache import (
+    BlockPool,
+    PoolExhausted,
+    chain_hash,
+    pin_chain,
+    unpin_chain,
+)
+
+BS = 4  # block size
+L, KV, DH = 1, 1, 2  # tiny fake payload geometry
+CAP = 12
+
+
+def _payload(rng, n):
+    k = rng.normal(size=(L, n, KV, DH)).astype(np.float32)
+    v = rng.normal(size=(L, n, KV, DH)).astype(np.float32)
+    return k, v
+
+
+class RadixOps:
+    """The operation vocabulary + invariants, independent of the driver."""
+
+    def __init__(self):
+        self.log = EventLog()
+        self.pool = BlockPool(CAP, self.log)
+        self.rng = np.random.default_rng(0)
+        self.pins = []  # lists of pinned block ids (the refcount ledger)
+
+    # -- operations -----------------------------------------------------------
+    def insert(self, seq):
+        """Walk ``seq`` along the radix exactly like the engine's
+        ``_fold_sequence_blocks`` (claimless, best-effort): resident full
+        blocks are skipped, a matching partial is extended (COW if
+        shared), missing blocks are added, a full pool stops the fold."""
+        pool, seq = self.pool, tuple(seq)
+        h, lo = "", 0
+        while lo < len(seq):
+            hi = min(lo + BS, len(seq))
+            btoks = tuple(seq[lo:hi])
+            parent, h = h, chain_hash(h, btoks)
+            is_full = hi - lo == BS
+            bid = pool.prefix_index.get(h) if is_full else None
+            blk = pool.blocks.get(bid) if bid is not None else None
+            if blk is not None and blk.chain == h and not blk.partial:
+                lo = hi
+                continue
+            pb = pool.lookup_partial(parent, btoks)
+            if pb is not None and len(pb.tokens) == len(btoks):
+                return  # identical partial already resident
+            if pb is not None:
+                ext = btoks[len(pb.tokens) :]
+                if pb.ref > 0 and pool.free_slots <= 0:
+                    return  # COW would need a page
+                k, v = _payload(self.rng, len(ext))
+                pool.extend_block(
+                    pb, ext, k, v, block_size=BS, held=0, protected_claims=set()
+                )
+            else:
+                if pool.free_slots <= 0:
+                    return
+                k, v = _payload(self.rng, hi - lo)
+                if is_full:
+                    pool.add_block(
+                        btoks, h, k, v, np.arange(lo, hi),
+                        protected_claims=set(), parent=parent,
+                    )
+                else:
+                    pool.add_partial_block(
+                        btoks, parent, k, v, np.arange(lo, hi),
+                        block_size=BS, protected_claims=set(),
+                    )
+            lo = hi
+
+    def lookup(self, seq):
+        """A radix descent returns exactly the leading blocks, content- and
+        chain-verified."""
+        blocks = self.pool.lookup_prefix(tuple(seq), BS)
+        h, covered = "", 0
+        for b in blocks:
+            assert not b.partial
+            assert b.tokens == tuple(seq[covered : covered + BS])
+            h = chain_hash(h, b.tokens)
+            assert b.chain == h
+            covered += BS
+
+    def pin(self, seq):
+        blocks = self.pool.lookup_prefix(tuple(seq), BS)
+        if blocks:
+            pin_chain(blocks)
+            self.pins.append([b.block_id for b in blocks])
+
+    def unpin(self, i):
+        if not self.pins:
+            return
+        ids = self.pins.pop(i % len(self.pins))
+        blocks = [self.pool.blocks.get(b) for b in ids]
+        # a pinned block can never have been evicted/removed under us
+        assert all(b is not None for b in blocks), (ids, blocks)
+        unpin_chain(blocks)
+
+    def evict_one(self):
+        try:
+            self.pool.evict(1, protected_claims=set())
+        except PoolExhausted:
+            assert all(b.ref > 0 for b in self.pool.blocks.values())
+
+    def cow_write(self, seq, i):
+        """Extending a SHARED partial copies: the sharer keeps its tokens
+        and bytes, and the copy never lands on the sharer's page."""
+        partials = [b for b in self.pool.blocks.values() if b.partial]
+        if not partials or self.pool.free_slots <= 0:
+            return
+        pb = partials[i % len(partials)]
+        pin_chain((pb,))  # become a sharer
+        try:
+            before_tokens = pb.tokens
+            before_k = np.array(pb.k)
+            ext = tuple(seq[: BS - len(pb.tokens)]) or (0,)
+            k, v = _payload(self.rng, len(ext))
+            nb = self.pool.extend_block(
+                pb, ext, k, v, block_size=BS, held=0, protected_claims=set()
+            )
+        finally:
+            unpin_chain((pb,))
+        assert nb is not pb
+        assert pb.tokens == before_tokens
+        assert np.array_equal(pb.k, before_k)
+        if pb.page_index is not None and nb.page_index is not None:
+            assert nb.page_index != pb.page_index
+            assert not np.shares_memory(pb.k, nb.k)
+
+    def readmit_cycle(self, i):
+        """Round-trip a block out of and back into the pool (offload/restore
+        simulation, including the readmit-overwrite index path)."""
+        cands = [b for b in self.pool.blocks.values() if b.ref == 0]
+        if not cands:
+            return
+        blk = cands[i % len(cands)]
+        k, v, pos = np.array(blk.k), np.array(blk.v), np.array(blk.positions)
+        self.pool.remove(blk.block_id, reason="offloaded")
+        blk.location = "host"
+        blk.restore_payload(k, v, pos)
+        self.pool.readmit(blk)
+        # offload.py emits block_stored after readmit; mirror it so the
+        # analyzer replay tracks the slot re-occupancy
+        self.log.emit(
+            "block_stored", block_id=blk.block_id, chain=blk.chain,
+            n_tokens=len(blk.tokens), page_index=blk.page_index,
+        )
+
+    # -- invariants -----------------------------------------------------------
+    def check(self):
+        self.pool.assert_consistent()
+        held = {}
+        for ids in self.pins:
+            for b in ids:
+                held[b] = held.get(b, 0) + 1
+        for bid, blk in self.pool.blocks.items():
+            assert blk.ref == held.get(bid, 0), (bid, blk.ref, held.get(bid, 0))
+        v = check_shared_page_immutability(self.log)
+        assert v.passed, v.reasons
+
+
+if HAS_HYPOTHESIS:
+
+    class RadixPoolMachine(RuleBasedStateMachine):
+        def __init__(self):
+            super().__init__()
+            self.ops = RadixOps()
+
+        seqs = st.lists(st.integers(0, 5), min_size=1, max_size=3 * BS)
+
+        @rule(seq=seqs)
+        def insert(self, seq):
+            self.ops.insert(seq)
+
+        @rule(seq=seqs)
+        def lookup(self, seq):
+            self.ops.lookup(seq)
+
+        @rule(seq=seqs)
+        def pin(self, seq):
+            self.ops.pin(seq)
+
+        @precondition(lambda self: self.ops.pins)
+        @rule(i=st.integers(0, 63))
+        def unpin(self, i):
+            self.ops.unpin(i)
+
+        @rule()
+        def evict_one(self):
+            self.ops.evict_one()
+
+        @rule(seq=seqs, i=st.integers(0, 63))
+        def cow_write(self, seq, i):
+            self.ops.cow_write(seq, i)
+
+        @rule(i=st.integers(0, 63))
+        def readmit_cycle(self, i):
+            self.ops.readmit_cycle(i)
+
+        @invariant()
+        def consistent(self):
+            self.ops.check()
+
+    TestRadixPool = RadixPoolMachine.TestCase
+    TestRadixPool.settings = settings(
+        max_examples=30, stateful_step_count=40, deadline=None
+    )
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_random_interleaving_deterministic(seed):
+    """Seeded driver over the same operation vocabulary — runs even where
+    hypothesis is unavailable, checking every invariant after every op."""
+    ops = RadixOps()
+    rng = np.random.default_rng(100 + seed)
+    names = ["insert", "lookup", "pin", "unpin", "evict", "cow", "readmit"]
+    for _ in range(120):
+        op = names[int(rng.integers(len(names)))]
+        seq = [int(t) for t in rng.integers(0, 6, size=int(rng.integers(1, 3 * BS + 1)))]
+        i = int(rng.integers(64))
+        if op == "insert":
+            ops.insert(seq)
+        elif op == "lookup":
+            ops.lookup(seq)
+        elif op == "pin":
+            ops.pin(seq)
+        elif op == "unpin":
+            ops.unpin(i)
+        elif op == "evict":
+            ops.evict_one()
+        elif op == "cow":
+            ops.cow_write(seq, i)
+        elif op == "readmit":
+            ops.readmit_cycle(i)
+        ops.check()
+
+
+# ------------------------------------------------ deterministic regression corpus
+# Shrunk counterexamples for the prefix_index staleness bug class fixed in
+# this change: readmit blindly overwrote a live holder's index entry, and
+# lookup resolved index hits without verifying the live block's chain.
+
+
+def _pool():
+    log = EventLog()
+    return BlockPool(8, log), log, np.random.default_rng(1)
+
+
+def test_regression_readmit_overwrite_keeps_live_holder():
+    """A restored twin readmitted over a live same-chain block must NOT
+    steal the index entry: after the twin is freed, the hash must still
+    resolve to the live block (the old blind overwrite left the index
+    orphaned — or pointing at a freed id whose page slot gets reused)."""
+    pool, log, rng = _pool()
+    toks = (1, 2, 3, 4)
+    h = chain_hash("", toks)
+    k, v = _payload(rng, BS)
+    twin = pool.add_block(toks, h, k, v, np.arange(BS), protected_claims=set())
+    kb, vb, pb = np.array(twin.k), np.array(twin.v), np.array(twin.positions)
+    pool.remove(twin.block_id, reason="offloaded")
+    twin.location = "host"
+    twin.restore_payload(kb, vb, pb)
+    k2, v2 = _payload(rng, BS)
+    live = pool.add_block(toks, h, k2, v2, np.arange(BS), protected_claims=set())
+    pool.readmit(twin)
+    assert pool.prefix_index[h] == live.block_id, "first resident wins"
+    pool.remove(twin.block_id, reason="evicted")
+    got = pool.lookup_prefix(toks, BS)
+    assert [b.block_id for b in got] == [live.block_id]
+    pool.assert_consistent()
+
+
+def test_regression_stale_entry_never_resolves_freed_or_foreign_slot():
+    """Poisoned index entries (freed id, or live id under a different
+    chain) terminate the radix walk instead of raising KeyError or
+    resolving a hash to foreign bytes."""
+    pool, log, rng = _pool()
+    toks = (1, 2, 3, 4)
+    h = chain_hash("", toks)
+    # entry -> never-allocated id
+    pool.prefix_index[h] = 999
+    assert pool.lookup_prefix(toks, BS) == []
+    # entry -> live block whose chain is different content
+    other = (9, 9, 9, 9)
+    k, v = _payload(rng, BS)
+    blk = pool.add_block(other, chain_hash("", other), k, v, np.arange(BS),
+                         protected_claims=set())
+    pool.prefix_index[h] = blk.block_id
+    assert pool.lookup_prefix(toks, BS) == []
+    del pool.prefix_index[h]
+    pool.assert_consistent()
+
+
+def test_regression_partial_grows_to_full_and_is_indexed():
+    """An unshared partial extended to block_size leaves partial_children,
+    joins prefix_index, and the page bytes grow in place (same slot)."""
+    pool, log, rng = _pool()
+    k, v = _payload(rng, 2)
+    pb = pool.add_partial_block((7, 8), "", k, v, np.arange(2),
+                                block_size=BS, protected_claims=set())
+    slot = pb.page_index
+    ke, ve = _payload(rng, 2)
+    out = pool.extend_block(pb, (9, 10), ke, ve, block_size=BS,
+                            held=0, protected_claims=set())
+    assert out is pb and not pb.partial
+    assert pb.page_index == slot
+    assert pool.prefix_index[chain_hash("", (7, 8, 9, 10))] == pb.block_id
+    assert pool.partial_children == {}
+    assert np.array_equal(np.asarray(pb.k[:, 2:4]), ke)
+    pool.assert_consistent()
+    assert check_shared_page_immutability(log).passed
+
+
+def test_regression_remove_partial_deregisters_child():
+    """Freeing a partial block must drop its partial_children entry — a
+    stale child id would resolve a parent hash to a reused slot."""
+    pool, log, rng = _pool()
+    k, v = _payload(rng, 3)
+    pb = pool.add_partial_block((5, 6, 7), "", k, v, np.arange(3),
+                                block_size=BS, protected_claims=set())
+    pool.remove(pb.block_id, reason="pressure")
+    assert pool.partial_children == {}
+    assert pool.lookup_partial("", (5, 6, 7, 8)) is None
+    pool.assert_consistent()

@@ -240,7 +240,10 @@ def test_soft_priority_pressure_order(bundle_and_params):
     for pfx in (hi_prefix, lo_prefix):
         r = eng.submit(pfx, max_new_tokens=1)
         eng.run(r)
-    eng.scheduler.apply_pressure(2)
+    eng.scheduler.apply_pressure(4)
     evs = eng.events.named("pressure_eviction")
-    first_claims = [e.claim_id for e in evs[:2]]
-    assert all(c == lo.claim_id for c in first_claims), first_claims
+    # claimless decode-tail partials (priority 0) are lost before any
+    # claim-covered block; among claim-covered blocks the lower-priority
+    # claim's go first
+    claimed = [e.claim_id for e in evs if e.claim_id is not None]
+    assert claimed and all(c == lo.claim_id for c in claimed[:2]), claimed
